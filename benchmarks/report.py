@@ -1,0 +1,46 @@
+"""Roofline report: renders results/dryrun/*.json (written by
+repro.launch.dryrun) as the §Roofline table — baseline and, where
+present, the optimized (--attn-sub / resident-ZeRO) counterpart."""
+import glob
+import json
+import os
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "results", "dryrun")
+
+
+def run():
+    out = []
+    files = sorted(f for f in glob.glob(os.path.join(RESULTS, "*.json"))
+                   if "__pallas" not in f)
+    if not files:
+        return ["roofline/report,SKIPPED,run repro.launch.dryrun first"]
+    agg_base = agg_opt = 0.0
+    n_opt = 0
+    for f in files:
+        r = json.load(open(f))
+        if r.get("status") != "ok":
+            continue
+        rl = r["roofline"]
+        line = (f"roofline/{r['arch']}/{r['shape']}/{r['mesh']},"
+                f"c={rl['t_compute']:.3f}s m={rl['t_memory']:.3f}s "
+                f"coll={rl['t_collective']:.4f}s,"
+                f"bott={rl['bottleneck']} useful={rl['useful_ratio']:.3f} "
+                f"peak={r['memory']['peak_per_device']/2**30:.1f}GiB")
+        pf = f.replace(".json", "__pallas.json")
+        if os.path.exists(pf):
+            o = json.load(open(pf))["roofline"]
+            line += (f" | opt: c={o['t_compute']:.3f} m={o['t_memory']:.3f} "
+                     f"coll={o['t_collective']:.4f}")
+            agg_base += rl["t_bound"]
+            agg_opt += o["t_bound"]
+            n_opt += 1
+        out.append(line)
+    if n_opt:
+        out.append(f"roofline/aggregate,{agg_base:.1f}s->{agg_opt:.1f}s,"
+                   f"bound-step sum over {n_opt} cells "
+                   f"({agg_base/agg_opt:.2f}x)")
+    return out
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

@@ -1,0 +1,47 @@
+"""Paper Fig. 2a analogue: batch-size sensitivity of batch splitting.
+
+Splitting wins at large batch (collective overlap outweighs the extra
+weight reads) and loses at small batch (the re-read penalty dominates) —
+the property that forces DynaFlow's *dynamic* per-bucket choice.  The
+same roofline overlap model, swept over batch sizes.
+"""
+from repro.configs import get_config
+from repro.core import partition, record_plan
+from repro.core.scheduler import ScheduleContext
+from repro.core.strategies import get_strategy
+from repro.models.layers import MeshInfo
+from repro.models.registry import build_model
+from repro.roofline.overlap import plan_overlap, split_weight_penalty
+
+
+def run():
+    out = []
+    cfg = get_config("chatglm3-6b")
+    mesh = MeshInfo(tp=16, dp=16, attn_impl="chunked")
+    model = build_model(cfg, mesh)
+    # prefill (serving) phase: the paper's Fig. 2a setting — token count
+    # is the split condition, so sweep (B, S) from tiny to large
+    for B_loc, S in ((1, 2048), (2, 64), (2, 256), (2, 2048), (4, 2048),
+                     (16, 2048), (64, 2048)):
+        segs, _ = model.build_segments("prefill", B_loc, S, s_max=S)
+        seg = [s for s in segs if s.count > 1][0]
+        info = ScheduleContext(local_batch=B_loc, seq_len=S, phase="prefill",
+                               arch=cfg.name)
+        base = record_plan(seg.graph, get_strategy("sequential"), info)
+        t_base = plan_overlap(seg.graph, base, tp=16).t_sequential
+        if B_loc >= 2:
+            split = record_plan(seg.graph,
+                                get_strategy("nanoflow", min_tokens=1), info)
+            pen = split_weight_penalty(seg.graph, split.num_mb)
+            t_split = plan_overlap(seg.graph, split, tp=16,
+                                   extra_weight_read_bytes=pen).t_overlapped
+            rel = t_base / t_split
+        else:
+            rel = 1.0
+        out.append(
+            f"sensitivity/tokens_{B_loc * S},{rel:.3f},x_split_vs_seq")
+    return out
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

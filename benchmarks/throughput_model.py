@@ -1,0 +1,93 @@
+"""Paper Figs. 9-12 analogue: modeled end-to-end gains per strategy.
+
+This container is CPU-only, so throughput deltas are derived from the
+plan-aware overlap model (roofline/overlap.py) applied to each strategy's
+actual recorded plan over the real layer graphs — the TPU quantity the
+strategies change is exposed collective/memory time, which the model
+computes from the same per-op costs the roofline uses.
+
+Reported: modeled step-time speedup vs the sequential plan for each
+(arch × strategy), the paper's throughput-improvement analogue:
+  Fig. 9  NanoFlow on dense archs
+  Fig. 10 DBO on the MoE arch
+  Fig. 11 comm-overlap (SBO) across families
+  Fig. 12 TokenWeave / Comet fusion
+"""
+from repro.configs import get_config
+from repro.core import partition, record_plan
+from repro.core.scheduler import ScheduleContext
+from repro.core.strategies import get_strategy
+from repro.models.layers import MeshInfo
+from repro.models.registry import build_model
+from repro.roofline.overlap import plan_overlap, split_weight_penalty
+
+# Serving-phase cases mirror the paper's vLLM/SGLang setting (prefill,
+# TP collectives proportional to activations); two train cases cover the
+# Megatron-style rows of Fig. 11/12.
+CASES = [
+    # (figure, arch, phase, strategy, B_loc, S)
+    ("fig9_nanoflow", "chatglm3-6b", "prefill", "nanoflow", 8, 2048),
+    ("fig9_nanoflow", "minitron-8b", "prefill", "nanoflow", 8, 2048),
+    ("fig9_nanoflow", "qwen2-vl-7b", "prefill", "nanoflow", 8, 2048),
+    ("fig10_dbo", "deepseek-moe-16b", "prefill", "dbo", 8, 2048),
+    ("fig10_dbo", "grok-1-314b", "prefill", "dbo", 8, 2048),
+    ("fig11_sbo", "deepseek-moe-16b", "prefill", "sbo", 8, 2048),
+    ("fig11_sbo", "chatglm3-6b", "prefill", "sbo", 8, 2048),
+    ("fig11_sbo_train", "deepseek-moe-16b", "train", "sbo", 16, 4096),
+    ("fig11_sbo_train", "grok-1-314b", "train", "sbo", 16, 4096),
+    ("fig12_tokenweave", "smollm-135m", "prefill", "tokenweave", 8, 2048),
+    ("fig12_tokenweave", "whisper-tiny", "prefill", "tokenweave", 8, 2048),
+    ("fig12_comet", "deepseek-moe-16b", "prefill", "comet", 8, 2048),
+    ("fig12_comet_train", "deepseek-moe-16b", "train", "comet", 16, 4096),
+    ("fig12_flux", "smollm-135m", "prefill", "flux", 8, 2048),
+    # Appendix B: DBO under a low-bandwidth fabric (multi-node DCN; the
+    # paper simulates this with PCIe and reports up to 2.06x)
+    ("appB_dbo_lowbw", "deepseek-moe-16b", "prefill", "dbo", 8, 2048),
+    ("appB_dbo_lowbw", "grok-1-314b", "prefill", "dbo", 8, 2048),
+]
+
+
+def model_case(arch, phase, strategy, B_loc, S, tp=16, bw_scale=1.0):
+    cfg = get_config(arch)
+    mesh = MeshInfo(tp=tp, dp=16, attn_impl="chunked")
+    model = build_model(cfg, mesh)
+    segs, _ = model.build_segments(phase, B_loc, S, s_max=S)
+    stacks = [s for s in segs if s.count > 1] or segs[1:-1] or segs
+    seg = max(stacks, key=lambda s: len(s.graph.nodes))
+    info = ScheduleContext(local_batch=B_loc, seq_len=S, phase=phase,
+                           arch=arch)
+
+    def report(strat_name, **kw):
+        strat = get_strategy(strat_name, **kw)
+        g = seg.graph
+        if strat.partition_rules():
+            g = partition(g, strat.partition_rules(), default_depth=2)
+        plan = record_plan(g, strat, info)
+        pen = split_weight_penalty(g, plan.num_mb)
+        return plan_overlap(g, plan, tp=tp, extra_weight_read_bytes=pen,
+                            bw_scale=bw_scale)
+
+    base = report("sequential")
+    got = report(strategy) if strategy not in ("nanoflow", "dbo") \
+        else report(strategy, min_tokens=1)
+    return base, got
+
+
+def run():
+    out = []
+    for fig, arch, phase, strat, B, S in CASES:
+        try:
+            bw = 0.125 if fig.startswith("appB") else 1.0
+            base, got = model_case(arch, phase, strat, B, S, bw_scale=bw)
+            speed = base.t_sequential / max(got.t_overlapped, 1e-12)
+            out.append(
+                f"{fig}/{arch},{speed:.3f},x_modeled"
+                f" (coll {base.coll_total*1e3:.2f}ms ->"
+                f" exposed {got.coll_exposed*1e3:.2f}ms)")
+        except Exception as e:                        # pragma: no cover
+            out.append(f"{fig}/{arch},ERROR,{type(e).__name__}:{e}")
+    return out
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

@@ -1,0 +1,63 @@
+"""End-to-end serving driver: batched requests through the DynaFlow engine.
+
+Serves a (smoke-sized) chatglm3 with bucketed prefill, continuous-batching
+decode, and the dynamic scheduler choosing per-bucket plans — the paper's
+deployment story in miniature.
+
+Run:  PYTHONPATH=src python examples/serve_batched.py [--requests 24]
+"""
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import get_smoke_config
+from repro.core.strategies import get_strategy
+from repro.models.layers import MeshInfo
+from repro.models.registry import build_model
+from repro.serve import Request, ServeConfig, ServeEngine
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="chatglm3-6b")
+    ap.add_argument("--requests", type=int, default=24)
+    ap.add_argument("--max-new", type=int, default=12)
+    ap.add_argument("--strategy", default="dynamic")
+    args = ap.parse_args()
+
+    cfg = get_smoke_config(args.arch)
+    model = build_model(cfg, MeshInfo(tp=1, dp=1))
+    segs, _ = model.build_segments("prefill", 1, 32, s_max=128)
+    params = model._init_from_segments(segs, jax.random.PRNGKey(0))
+
+    eng = ServeEngine(model, params, get_strategy(args.strategy),
+                      ServeConfig(max_batch=8, s_max=128,
+                                  prefill_buckets=(16, 32, 64)))
+    rng = np.random.default_rng(0)
+    t0 = time.perf_counter()
+    for i in range(args.requests):
+        n = int(rng.integers(4, 50))
+        eng.submit(Request(rid=i,
+                           prompt=rng.integers(0, cfg.vocab, n,
+                                               dtype=np.int32),
+                           max_new_tokens=args.max_new))
+    done = eng.run()
+    dt = time.perf_counter() - t0
+    toks = sum(len(r.output) for r in done)
+    ttft = [r.first_token_s - r.submitted_s for r in done]
+    print(f"served {len(done)} requests / {toks} tokens in {dt:.2f}s "
+          f"({toks/dt:.1f} tok/s)")
+    print(f"TTFT p50={np.percentile(ttft, 50)*1e3:.0f}ms "
+          f"p99={np.percentile(ttft, 99)*1e3:.0f}ms")
+    print(f"engine stats: {eng.stats}")
+    print(f"compile cache: {eng.compile_cache.stats['misses']} builds, "
+          f"{eng.compile_cache.stats['hits']} replays "
+          f"(the CUDA-graph-capture analogue)")
+    assert all(len(r.output) == args.max_new for r in done)
+    print("serve_batched OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,94 @@
+"""Fault-tolerant training driver: a ~135M-class architecture (smoke-sized
+for CPU), synthetic data pipeline, async checkpoints, a simulated node
+crash mid-run, exact-resume, and gradient compression — the full
+large-scale training substrate exercised end to end.
+
+Run:  PYTHONPATH=src python examples/train_ft.py [--steps 120]
+"""
+import argparse
+import tempfile
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_smoke_config
+from repro.core.strategies import get_strategy
+from repro.data import DataConfig, SyntheticBackend, TokenPipeline
+from repro.ft.elastic import FailureSimulator
+from repro.models.layers import MeshInfo
+from repro.models.registry import build_model
+from repro.optim import AdamWConfig
+from repro.train import (TrainLoopConfig, TrainStepConfig, build_train_step,
+                         train_loop)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="smollm-135m")
+    ap.add_argument("--steps", type=int, default=120)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--crash-at", type=int, default=60)
+    args = ap.parse_args()
+
+    cfg = get_smoke_config(args.arch)
+    model = build_model(cfg, MeshInfo(tp=1, dp=1))
+    tcfg = TrainStepConfig(
+        optimizer=AdamWConfig(lr=1e-3, quantized=True),
+        remat=False, compress_grads=True,
+        warmup=10, total_steps=args.steps)
+    step_fn, segs, binputs, init_opt = build_train_step(
+        model, get_strategy("dynamic"), args.batch, args.seq, tcfg)
+    params = model._init_from_segments(segs, jax.random.PRNGKey(0))
+    opt = init_opt(params)
+    n = sum(int(np.prod(p.shape))
+            for p in jax.tree_util.tree_leaves(params))
+    print(f"training {cfg.name}: {n/1e6:.2f}M params, "
+          f"int8 AdamW second moment, int8-compressed DP grads")
+
+    class PatternBackend(SyntheticBackend):
+        """Learnable synthetic stream: next token = (id + 7) mod vocab
+        with a small amount of noise — loss can actually fall."""
+
+        def batch(self, dcfg, step):
+            b = super().batch(dcfg, step)
+            ids = b["ids"]
+            labels = (ids + 7) % self.vocab
+            flip = (ids % 17) == 0
+            labels = np.where(flip, ids, labels)
+            return {"ids": ids, "labels": labels.astype(np.int32)}
+
+    pipe = TokenPipeline(PatternBackend(cfg.vocab),
+                         DataConfig(seq_len=args.seq,
+                                    global_batch=args.batch))
+
+    def to_dev(b):
+        return {"ids": jnp.asarray(b["ids"]),
+                "labels": jnp.asarray(b["labels"]),
+                "positions": jnp.broadcast_to(
+                    jnp.arange(args.seq, dtype=jnp.int32),
+                    (args.batch, args.seq))}
+
+    with tempfile.TemporaryDirectory() as ckpt_dir:
+        sim = FailureSimulator(crash_steps=(args.crash_at,))
+        t0 = time.perf_counter()
+        params, opt, hist = train_loop(
+            jax.jit(step_fn, donate_argnums=(0, 1)), params, opt, pipe,
+            TrainLoopConfig(steps=args.steps, ckpt_dir=ckpt_dir,
+                            ckpt_every=25, log_every=20),
+            failure_sim=sim, to_device=to_dev, log=print)
+        dt = time.perf_counter() - t0
+    losses = [h["loss"] for h in hist]
+    print(f"\n{args.steps} steps in {dt:.1f}s "
+          f"({args.steps*args.batch*args.seq/dt:.0f} tok/s)")
+    print(f"loss {losses[0]:.4f} -> {losses[-1]:.4f}; "
+          f"injected failures: {sim.injected}")
+    assert losses[-1] < losses[0]
+    assert sim.injected == [("crash", args.crash_at)]
+    print("train_ft OK (crashed, restored, converged)")
+
+
+if __name__ == "__main__":
+    main()

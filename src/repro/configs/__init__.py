@@ -1,0 +1,41 @@
+"""Architecture config registry.  ``get_config(arch_id)`` returns the exact
+published config; ``get_smoke_config(arch_id)`` a reduced same-family config
+for CPU smoke tests."""
+from .base import ArchConfig, MoEConfig, SSMConfig, ShapeConfig, SHAPES
+
+_REGISTRY = {}
+
+
+def register(cfg_fn):
+    import functools
+
+    cfg = cfg_fn()
+    _REGISTRY[cfg.name] = cfg_fn
+    return cfg_fn
+
+
+def get_config(name: str) -> ArchConfig:
+    _ensure_loaded()
+    if name not in _REGISTRY:
+        raise KeyError(f"unknown arch {name!r}; have {sorted(_REGISTRY)}")
+    return _REGISTRY[name]()
+
+
+def get_smoke_config(name: str) -> ArchConfig:
+    return get_config(name).smoke()
+
+
+def list_archs():
+    _ensure_loaded()
+    return sorted(_REGISTRY)
+
+
+def _ensure_loaded():
+    if _REGISTRY:
+        return
+    from . import (chatglm3_6b, deepseek_coder_33b, smollm_135m,  # noqa
+                   minitron_8b, deepseek_moe_16b, grok1_314b, mamba2_2p7b,
+                   whisper_tiny, qwen2_vl_7b, zamba2_1p2b)
+
+
+_ensure_loaded_on_import = False

@@ -1,0 +1,31 @@
+"""DynaFlow core — transparent & flexible intra-device parallelism via
+programmable operator scheduling (the paper's primary contribution), as a
+composable JAX substrate.
+
+Public API:
+  Module / Op / Param / FnOp / trace / mark       — frontend capture
+  SplitModule / SplitFunc / Mark / partition      — graph partition (Fig. 5)
+  OpSchedulerBase / SchedCtx / record_plan        — programmable scheduling (Fig. 6)
+  static_analysis / Realizer / realize            — backend (Alg. 1)
+  sequential_plan                                 — reference fallback
+"""
+from .graph import FULL, OpGraph, OpNode, TensorRef
+from .module import FnOp, Module, Op, Param, mark, trace
+from .partition import Mark, SplitEveryOp, SplitFunc, SplitModule, partition
+from .plan import ExecutionPlan, OpHandle, PlanStep, graph_fingerprint
+from .scheduler import (OpSchedulerBase, SchedCtx, ScheduleContext,
+                        record_plan)
+from .analysis import AnalysisResult, static_analysis
+from .backend import FusedCallInfo, Realizer, realize, sequential_plan
+from .compile_cache import GLOBAL_CACHE, CompileCache
+
+__all__ = [
+    "FULL", "OpGraph", "OpNode", "TensorRef",
+    "FnOp", "Module", "Op", "Param", "mark", "trace",
+    "Mark", "SplitEveryOp", "SplitFunc", "SplitModule", "partition",
+    "ExecutionPlan", "OpHandle", "PlanStep", "graph_fingerprint",
+    "OpSchedulerBase", "SchedCtx", "ScheduleContext", "record_plan",
+    "AnalysisResult", "static_analysis",
+    "FusedCallInfo", "Realizer", "realize", "sequential_plan",
+    "GLOBAL_CACHE", "CompileCache",
+]

@@ -1,0 +1,192 @@
+"""Plan realization — paper Alg. 1 ``RuntimeExecute`` + backend engine.
+
+``realize`` executes an ``ExecutionPlan`` against real arrays *inside* a
+jitted (and usually shard_mapped) step function.  The plan order becomes
+the HLO emission order — on TPU this is the physical schedule knob: XLA's
+latency-hiding scheduler overlaps async collectives with whatever
+independent compute the plan interleaves around them.
+
+Data-flow follows the static analysis verbatim:
+  * micro-batch reads of a FULL value  -> static ``lax.slice`` (zero-copy)
+  * merged reads of per-part values    -> preallocated contiguous buffer;
+    producers wrote slices via ``dynamic_update_slice`` at production
+    (no ``concatenate`` anywhere on the merge path)
+  * env references are dropped at the precomputed death site, bounding
+    XLA liveness (the GC analogue of Alg. 1 ref_count).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .analysis import BUF, AnalysisResult, static_analysis
+from .graph import FULL, OpGraph
+from .plan import ExecutionPlan, PlanStep
+
+
+def _resolve_path(tree, path):
+    for k in path:
+        if tree is None or k not in tree:
+            return None
+        tree = tree[k]
+    return tree
+
+
+@dataclasses.dataclass
+class FusedCallInfo:
+    """Handed to ``replace_func`` so fused kernels know what they replace."""
+
+    step: PlanStep
+    graph: OpGraph
+    ext_inputs: list          # [(tid, part)]
+    ext_outputs: list         # [(tid, part)]
+    split_sizes: tuple
+    params: dict              # {param_path: subtree}
+
+    def node(self, i: int = 0):
+        return self.graph.nodes[self.step.handles[i].oid]
+
+    def params_of(self, i: int = 0):
+        n = self.node(i)
+        return self.params.get(n.param_paths[0]) if n.param_paths else {}
+
+
+class Realizer:
+    """Executes plans.  One instance per (graph, plan, analysis)."""
+
+    def __init__(self, graph: OpGraph, plan: ExecutionPlan,
+                 analysis: Optional[AnalysisResult] = None):
+        graph_nodes = graph.nodes
+        self.graph = graph
+        self.plan = plan
+        self.analysis = analysis or static_analysis(graph, plan)
+        self.offsets = []
+        acc = 0
+        for s in plan.split_sizes:
+            self.offsets.append(acc)
+            acc += s
+        self._nodes = graph_nodes
+        self._deaths_by_step: dict[int, list] = {}
+        for key, d in self.analysis.death.items():
+            self._deaths_by_step.setdefault(d, []).append(key)
+
+    # -- value plumbing ----------------------------------------------------
+    def _read(self, env, t, part, mode, key):
+        ref = self.graph.tensors[t]
+        if mode == "direct":
+            return env[(t, key)]
+        if mode == "slice":
+            full = env[(t, FULL)]
+            bd = ref.batch_dim
+            off, sz = self.offsets[part], self.plan.split_sizes[part]
+            return lax.slice_in_dim(full, off, off + sz, axis=bd)
+        if mode == "assemble":
+            return env[(t, BUF)]
+        raise AssertionError(mode)
+
+    def _write(self, env, t, part, val):
+        ref = self.graph.tensors[t]
+        env[(t, part)] = val
+        if t in self.analysis.prealloc and part != FULL:
+            bkey = (t, BUF)
+            if bkey not in env:
+                env[bkey] = jnp.zeros(ref.shape, ref.dtype)
+            bd = ref.batch_dim
+            start = [0] * val.ndim
+            start[bd] = self.offsets[part]
+            env[bkey] = lax.dynamic_update_slice(env[bkey], val, tuple(start))
+
+    def _node_params(self, node, params):
+        if not node.param_paths:
+            return {} if node.members else {}
+        resolved = {p: _resolve_path(params, p) for p in node.param_paths}
+        if node.members:
+            return resolved
+        return resolved[node.param_paths[0]] or {}
+
+    # -- execution -----------------------------------------------------------
+    def __call__(self, params, inputs: dict[str, Any]) -> dict[str, Any]:
+        g, plan, ana = self.graph, self.plan, self.analysis
+        env: dict = {}
+        for name, t in g.inputs.items():
+            if name not in inputs:
+                raise KeyError(f"missing graph input {name!r}")
+            env[(t, FULL)] = inputs[name]
+        for i, step in enumerate(plan.steps):
+            reads = ana.reads[i]
+            vals = [self._read(env, t, p, m, k) for (t, p, m, k) in reads]
+            byref = {(t, p): v for (t, p, m, k), v in zip(reads, vals)}
+            if step.kind == "fused":
+                self._run_fused(env, step, byref, params)
+            else:
+                h = step.handles[0]
+                node = self._nodes[h.oid]
+                part = FULL if step.kind == "merged" else h.mb
+                args = []
+                for t in node.inputs:
+                    p = part if g.tensors[t].batch_dim is not None else FULL
+                    args.append(byref[(t, p)])
+                outs = node.fn(self._node_params(node, params), *args)
+                if not isinstance(outs, tuple):
+                    outs = (outs,)
+                for t, v in zip(node.outputs, outs):
+                    p = part if g.tensors[t].batch_dim is not None else FULL
+                    self._write(env, t, p, v)
+            # GC at the death site (Alg. 1 ref_count reaching zero)
+            for key in self._deaths_by_step.get(i, ()):
+                env.pop(key, None)
+        # final outputs, merged to FULL
+        out = {}
+        for (t, p, m, k), name in zip(ana.reads[-1], g.outputs.keys()):
+            out[name] = self._read(env, t, FULL, m, k)
+        return out
+
+    def _run_fused(self, env, step: PlanStep, byref, params):
+        g = self.graph
+        internal = {t for h in step.handles for t in g.nodes[h.oid].outputs}
+        ext_in, seen = [], set()
+        for h in step.handles:
+            for t in g.nodes[h.oid].inputs:
+                if t in internal:
+                    continue
+                p = h.mb if g.tensors[t].batch_dim is not None else FULL
+                if (t, p) not in seen:
+                    seen.add((t, p))
+                    ext_in.append((t, p))
+        from .analysis import step_writes
+        ext_out = step_writes(g, step, len(self.plan.split_sizes))
+        pdict = {}
+        for h in step.handles:
+            n = g.nodes[h.oid]
+            for pp in n.param_paths:
+                pdict[pp] = _resolve_path(params, pp)
+        info = FusedCallInfo(step, g, ext_in, ext_out,
+                             self.plan.split_sizes, pdict)
+        vals = [byref[key] for key in ext_in]
+        outs = step.replace_fn(info, *vals)
+        if not isinstance(outs, tuple):
+            outs = (outs,)
+        if len(outs) != len(ext_out):
+            raise ValueError(
+                f"fused kernel {step.replace_name} returned {len(outs)} "
+                f"outputs; expected {len(ext_out)} ({ext_out})")
+        for (t, p), v in zip(ext_out, outs):
+            self._write(env, t, p, v)
+
+
+def realize(graph: OpGraph, plan: ExecutionPlan, params, inputs,
+            analysis: Optional[AnalysisResult] = None) -> dict:
+    """One-shot helper (tests / small models)."""
+    return Realizer(graph, plan, analysis)(params, inputs)
+
+
+def sequential_plan(graph: OpGraph) -> ExecutionPlan:
+    """Reference plan: topo order, no split (the paper's fallback mode)."""
+    from .plan import OpHandle, graph_fingerprint
+    steps = [PlanStep("exec", (OpHandle(oid, FULL, graph.nodes[oid].name),))
+             for oid in graph.topo_order()]
+    return ExecutionPlan(steps, (), graph_fingerprint(graph))

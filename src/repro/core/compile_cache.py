@@ -1,0 +1,50 @@
+"""Executable cache — the CUDA-Graph analogue (paper §3.3.2).
+
+DynaFlow-on-GPU captures one CUDA graph per (subgraph, micro-batch config)
+and replays it; here we compile one XLA executable per
+(plan fingerprint, input shapes) bucket and dispatch to it at run time.
+The runtime dispatcher (serve engine / train loop) rounds incoming batches
+to a bucket, asks the scheduler for a plan for that bucket, and reuses the
+cached executable — dynamic schedule choice with static-graph performance.
+"""
+from __future__ import annotations
+
+import time
+from typing import Any, Callable, Optional
+
+import jax
+
+
+class CompileCache:
+    def __init__(self):
+        self._cache: dict = {}
+        self.stats = {"hits": 0, "misses": 0, "compile_s": 0.0,
+                      "trace_s": 0.0}
+
+    def key_for(self, plan_fp: str, inputs: dict) -> tuple:
+        shapes = tuple(sorted(
+            (k, tuple(v.shape), str(getattr(v, "dtype", type(v))))
+            for k, v in inputs.items()))
+        return (plan_fp, shapes)
+
+    def get_or_build(self, key, build: Callable[[], Callable],
+                     example_args: Optional[tuple] = None):
+        if key in self._cache:
+            self.stats["hits"] += 1
+            return self._cache[key]
+        self.stats["misses"] += 1
+        t0 = time.perf_counter()
+        fn = build()
+        self.stats["trace_s"] += time.perf_counter() - t0
+        if example_args is not None:
+            t0 = time.perf_counter()
+            fn = jax.jit(fn).lower(*example_args).compile()
+            self.stats["compile_s"] += time.perf_counter() - t0
+        self._cache[key] = fn
+        return fn
+
+    def __len__(self):
+        return len(self._cache)
+
+
+GLOBAL_CACHE = CompileCache()

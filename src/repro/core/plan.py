@@ -1,0 +1,79 @@
+"""Execution plans — the physical schedule produced by a scheduler.
+
+A plan is the JAX analogue of the stream of ``execute()`` dispatches the
+paper's backend consumes: an ordered list of steps, each executing one op
+for one micro-batch, a merged execution of one op across all micro-batches,
+or a fused group replaced by a custom kernel (``replace_func``).
+
+Plans are recorded once per (graph, context) and then realized inside a
+jitted step — the analogue of capturing CUDA graphs per micro-batch and
+replaying them.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+from typing import Callable, Optional, Sequence
+
+from .graph import FULL, OpGraph
+
+
+@dataclasses.dataclass(frozen=True)
+class OpHandle:
+    """An (operator, micro-batch) instance; ``mb == FULL`` when unsplit."""
+
+    oid: int
+    mb: int
+    name: str = ""
+
+    def __repr__(self):
+        tag = "*" if self.mb == FULL else str(self.mb)
+        return f"<{self.name}@{tag}>"
+
+
+@dataclasses.dataclass(frozen=True)
+class PlanStep:
+    kind: str                       # 'exec' | 'merged' | 'fused'
+    handles: tuple[OpHandle, ...]
+    replace_name: str = ""          # fingerprint key for fused kernels
+    replace_fn: Optional[Callable] = dataclasses.field(
+        default=None, compare=False, hash=False)
+
+    def __repr__(self):
+        hs = ",".join(repr(h) for h in self.handles)
+        extra = f" via {self.replace_name}" if self.replace_name else ""
+        return f"{self.kind}({hs}){extra}"
+
+
+@dataclasses.dataclass
+class ExecutionPlan:
+    steps: list[PlanStep]
+    split_sizes: tuple[int, ...]    # () => no split; local micro-batch sizes
+    graph_fingerprint: str = ""
+
+    @property
+    def num_mb(self) -> int:
+        return len(self.split_sizes) if self.split_sizes else 1
+
+    def fingerprint(self) -> str:
+        h = hashlib.sha256()
+        h.update(self.graph_fingerprint.encode())
+        h.update(repr(self.split_sizes).encode())
+        for s in self.steps:
+            h.update(repr(s).encode())
+        return h.hexdigest()[:16]
+
+    def pretty(self) -> str:
+        lines = [f"split={list(self.split_sizes) or 'off'}"]
+        lines += [f"  {i:3d}: {s!r}" for i, s in enumerate(self.steps)]
+        return "\n".join(lines)
+
+
+def graph_fingerprint(graph: OpGraph) -> str:
+    h = hashlib.sha256()
+    for oid in graph.topo_order():
+        n = graph.nodes[oid]
+        h.update(f"{n.name}|{n.inputs}|{n.outputs}|{n.resource}".encode())
+    for name, t in sorted(graph.inputs.items()):
+        h.update(f"in:{name}:{graph.tensors[t].shape}".encode())
+    return h.hexdigest()[:16]

@@ -1,0 +1,48 @@
+"""Intra-device parallelism strategies (paper Table 2), each implemented
+as an ``OpSchedulerBase`` on the DynaFlow frontend APIs — the LoC of these
+files is the reproduction of the paper's engineering-cost claim.
+
+  sequential   fallback (paper §3.2.2: execute without a kernel)
+  nanoflow     split micro-batches + resource-interleave  (Zhu et al.)
+  dbo          dual-batch overlap: attention merged, MoE split (DeepSeek)
+  sbo          single-batch overlap: reorder independent compute behind
+               network ops (LongCat-style)
+  tokenweave   fused AR+add+RMSNorm via replace_func        (Gond et al.)
+  comet        chunked a2a/expert-GEMM overlap via replace_func
+  flux         fused GEMM+AR via replace_func (reproduces the paper's
+               negative result §5.3.5)
+  dynamic      context-driven selection among the above (the paper's
+               headline contribution: per-bucket strategy choice)
+"""
+from .sequential import Sequential
+from .nanoflow import NanoFlow
+from .dbo import DualBatchOverlap
+from .sbo import SingleBatchOverlap
+from .tokenweave import TokenWeave
+from .comet import Comet
+from .flux import Flux
+from .dynamic import DynamicScheduler
+
+STRATEGIES = {
+    "sequential": Sequential,
+    "nanoflow": NanoFlow,
+    "dbo": DualBatchOverlap,
+    "sbo": SingleBatchOverlap,
+    "tokenweave": TokenWeave,
+    "comet": Comet,
+    "flux": Flux,
+    "dynamic": DynamicScheduler,
+}
+
+
+def get_strategy(name: str, **kw):
+    if name not in STRATEGIES:
+        raise KeyError(f"unknown strategy {name!r}; have {sorted(STRATEGIES)}")
+    return STRATEGIES[name](**kw)
+
+
+def tokens_of(info) -> int:
+    """Token count of the step — the paper's batch-size split condition."""
+    if info.phase == "decode":
+        return info.local_batch
+    return info.local_batch * max(info.seq_len, 1)

@@ -1,0 +1,54 @@
+"""Context-driven strategy selection — the paper's headline capability.
+
+The scheduler inspects the execution context (token count, phase, graph
+contents) at plan-record time and delegates to the best sub-strategy:
+
+  MoE graph, large batch   -> DBO  (attention merged, MoE split+overlap)
+  dense graph, large batch -> NanoFlow split + TokenWeave fusion targets
+  any graph, small batch   -> SBO reorder-only (no split: the paper's
+                              Fig. 2a point — splitting small batches
+                              inflates memory traffic)
+  tiny batch               -> sequential fallback (lowest CPU overhead,
+                              paper Fig. 8)
+"""
+from ..scheduler import OpSchedulerBase
+from .dbo import DualBatchOverlap
+from .nanoflow import NanoFlow
+from .sbo import SingleBatchOverlap
+from .sequential import Sequential
+from .tokenweave import TokenWeave
+
+
+class DynamicScheduler(OpSchedulerBase):
+    name = "dynamic"
+
+    def __init__(self, split_tokens: int = 2048, seq_tokens: int = 64,
+                 fuse: bool = True):
+        self.split_tokens = split_tokens
+        self.seq_tokens = seq_tokens
+        self.fuse = fuse
+        self._dbo = DualBatchOverlap(min_tokens=split_tokens)
+        self._nano = NanoFlow(min_tokens=split_tokens)
+        self._sbo = SingleBatchOverlap()
+        self._seq = Sequential()
+        self._tw = TokenWeave()
+
+    def partition_rules(self):
+        return self._dbo.partition_rules()
+
+    def pick(self, ctx):
+        from . import tokens_of
+        t = tokens_of(ctx.info)
+        has_moe = bool(ctx.find(r"moe_a2a|expert_ffn"))
+        if t < self.seq_tokens:
+            return self._seq
+        if t < self.split_tokens or ctx.info.local_batch < 2:
+            return self._sbo
+        if has_moe:
+            return self._dbo
+        if self.fuse and self._tw.triples(ctx.graph):
+            return self._tw
+        return self._nano
+
+    def schedule(self, ctx):
+        self.pick(ctx).schedule(ctx)

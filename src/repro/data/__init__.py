@@ -1,0 +1,2 @@
+from .pipeline import (DataConfig, MemmapBackend, SyntheticBackend,
+                       TokenPipeline)

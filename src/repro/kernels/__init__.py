@@ -1,0 +1,12 @@
+"""Pallas TPU kernels for the paper's compute hot-spots.
+
+Each kernel lives in <name>.py (pl.pallas_call + BlockSpec), with the
+jit'd public wrappers in ops.py and pure-jnp oracles in ref.py:
+
+  rmsnorm.py          fused residual-add + RMSNorm (TokenWeave local half)
+  tokenweave.py       fused reduce-scatter + add/norm + all-gather
+  flash_attention.py  blockwise online-softmax attention
+  decode_attention.py flash-decode against a KV cache
+  grouped_matmul.py   grouped expert FFN (Comet compute half)
+  ssd_scan.py         Mamba2 chunked SSD with VMEM-carried state
+"""

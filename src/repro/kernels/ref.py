@@ -1,0 +1,90 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose references)."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+def rmsnorm(x, g, *, eps: float = 1e-5):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * lax.rsqrt(var + eps)).astype(x.dtype) * g
+
+
+def fused_add_rmsnorm(x, y, g, *, eps: float = 1e-5):
+    s = x.astype(jnp.float32) + y.astype(jnp.float32)
+    var = jnp.mean(s * s, axis=-1, keepdims=True)
+    h = (s * lax.rsqrt(var + eps))
+    return s.astype(x.dtype), h.astype(x.dtype) * g
+
+
+def flash_attention(q, k, v, *, causal: bool = True, sm_scale=None):
+    B, Sq, H, hd = q.shape
+    Sk = k.shape[1]
+    if sm_scale is None:
+        sm_scale = 1.0 / math.sqrt(hd)
+    s = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * sm_scale
+    if causal:
+        qi = jnp.arange(Sq)[:, None]
+        ki = jnp.arange(Sk)[None, :]
+        s = jnp.where(ki <= qi, s, -1e30)
+    w = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bkhd->bqhd", w,
+                      v.astype(jnp.float32)).astype(q.dtype)
+
+
+def decode_attention(q, k_cache, v_cache, cache_len, *, sm_scale=None):
+    B, _, H, hd = q.shape
+    S = k_cache.shape[1]
+    if sm_scale is None:
+        sm_scale = 1.0 / math.sqrt(hd)
+    s = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
+                   k_cache.astype(jnp.float32)) * sm_scale
+    ki = jnp.arange(S)[None, None, None, :]
+    vl = jnp.asarray(cache_len)
+    if vl.ndim:
+        vl = vl.reshape(-1, 1, 1, 1)
+    s = jnp.where(ki < vl, s, -1e30)
+    w = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bkhd->bqhd", w,
+                      v_cache.astype(jnp.float32)).astype(q.dtype)
+
+
+def grouped_ffn(x, w1, w3, w2):
+    h1 = jnp.einsum("end,edf->enf", x.astype(jnp.float32),
+                    w1.astype(jnp.float32))
+    h3 = jnp.einsum("end,edf->enf", x.astype(jnp.float32),
+                    w3.astype(jnp.float32))
+    h = jax.nn.silu(h1) * h3
+    return jnp.einsum("enf,efd->end", h,
+                      w2.astype(jnp.float32)).astype(x.dtype)
+
+
+def ssd_scan(x, dt, A, B, C, D, *, chunk: int = 128):
+    """Sequential-recurrence oracle (exact, O(L) state updates)."""
+    b, L, H, P = x.shape
+    G, N = B.shape[2], B.shape[3]
+    rep = H // G
+    xf = x.astype(jnp.float32)
+    Bf = jnp.repeat(B.astype(jnp.float32), rep, axis=2)   # (b, L, H, N)
+    Cf = jnp.repeat(C.astype(jnp.float32), rep, axis=2)
+    dtf = dt.astype(jnp.float32)
+
+    def step(state, inp):
+        xt, dtt, Bt, Ct = inp                  # (b,H,P), (b,H), (b,H,N) x2
+        a = jnp.exp(dtt * A[None, :])          # (b,H)
+        state = state * a[..., None, None] + \
+            jnp.einsum("bh,bhn,bhp->bhnp", dtt, Bt, xt)
+        y = jnp.einsum("bhn,bhnp->bhp", Ct, state)
+        return state, y
+
+    xs = (jnp.moveaxis(xf, 1, 0), jnp.moveaxis(dtf, 1, 0),
+          jnp.moveaxis(Bf, 1, 0), jnp.moveaxis(Cf, 1, 0))
+    s0 = jnp.zeros((b, H, N, P), jnp.float32)
+    _, ys = lax.scan(step, s0, xs)             # (L, b, H, P)
+    y = jnp.moveaxis(ys, 0, 1) + xf * D[None, None, :, None]
+    return y.astype(x.dtype)

@@ -1,0 +1,190 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+For each cell the step function (train_step / prefill_step / decode_step,
+per the shape's kind) is shard_mapped over the production mesh, lowered
+against global ShapeDtypeStructs (no allocation), compiled, and the
+compiled artifact's memory_analysis / cost_analysis / HLO collective
+bytes are recorded to results/dryrun/<arch>__<shape>__<mesh>.json.
+
+Usage:
+  python -m repro.launch.dryrun --arch chatglm3-6b --shape train_4k
+  python -m repro.launch.dryrun --all [--multi-pod] [--strategy dynamic]
+"""
+import argparse
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from ..configs import get_config, list_archs
+from ..configs.base import SHAPES
+from ..core.strategies import get_strategy
+from ..models.registry import build_model
+from ..roofline.hlo import analyze as hlo_analyze
+from ..roofline.model import roofline_terms
+from .mesh import make_mesh_info, make_production_mesh, mesh_shape_dict
+from .steps import (build_global_decode_step, build_global_prefill_step,
+                    build_global_train_step)
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                           "results", "dryrun")
+
+
+def skip_reason(cfg, shape_name: str):
+    shape = SHAPES[shape_name]
+    if shape_name == "long_500k" and not cfg.subquadratic:
+        return ("full-attention arch: 512k dense-KV decode is not "
+                "sub-quadratic-capable (DESIGN.md §Arch-applicability)")
+    return None
+
+
+def run_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
+             strategy: str = "dynamic", verbose: bool = True,
+             attn_sub: bool = False, remat_policy: str = "full") -> dict:
+    cfg = get_config(arch)
+    reason = skip_reason(cfg, shape_name)
+    mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+    if reason:
+        return {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+                "status": "skipped", "reason": reason}
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    fsdp = cfg.fsdp_train if shape.kind == "train" else cfg.fsdp_serve
+    minfo = make_mesh_info(mesh, fsdp=fsdp, attn_impl="chunked",
+                           fsdp_resident=(shape.kind == "decode"))
+    model = build_model(cfg, minfo)
+    sched = get_strategy(strategy)
+
+    t0 = time.perf_counter()
+    if shape.kind == "train":
+        fn, in_sdss, in_shd, donate, _, segs = build_global_train_step(
+            model, sched, shape, mesh, remat_policy=remat_policy)
+    elif shape.kind == "prefill":
+        fn, in_sdss, in_shd, donate, segs = build_global_prefill_step(
+            model, sched, shape, mesh)
+    else:
+        fn, in_sdss, in_shd, donate, segs = build_global_decode_step(
+            model, sched, shape, mesh)
+    t_build = time.perf_counter() - t0
+
+    jitted = jax.jit(fn, in_shardings=in_shd, donate_argnums=donate)
+    with mesh:
+        t0 = time.perf_counter()
+        lowered = jitted.lower(*in_sdss)
+        t_lower = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        compiled = lowered.compile()
+        t_compile = time.perf_counter() - t0
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    hlo = compiled.as_text()
+    scopes = (("flashable_attention", "flashable_decode")
+              if attn_sub else ())
+    hstats = hlo_analyze(hlo, substitute_scopes=scopes)
+    coll = hstats["collectives"]
+
+    chips = mesh.devices.size
+    n_total, n_active = cfg.param_count()
+    rl = roofline_terms(
+        arch=arch, shape=shape_name, mesh=mesh_name, chips=chips,
+        hlo_flops=hstats["flops"],
+        hlo_bytes=hstats["hbm_bytes"],
+        coll_payload=coll, n_params=n_total, n_active=n_active,
+        tokens=shape.tokens_per_step, train=(shape.kind == "train"),
+        axis_size=mesh_shape_dict(mesh).get("model", 16))
+
+    rec = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_name,
+        "status": "ok", "strategy": strategy, "chips": chips,
+        "attn_sub": attn_sub,
+        "substituted_bytes": hstats.get("substituted_bytes", {}),
+        "phase": shape.kind,
+        "build_s": round(t_build, 2), "lower_s": round(t_lower, 2),
+        "compile_s": round(t_compile, 2),
+        "memory": {
+            "argument_bytes": getattr(mem, "argument_size_in_bytes", 0),
+            "output_bytes": getattr(mem, "output_size_in_bytes", 0),
+            "temp_bytes": getattr(mem, "temp_size_in_bytes", 0),
+            "alias_bytes": getattr(mem, "alias_size_in_bytes", 0),
+            # memory_analysis reports the per-device (partitioned) module
+            "peak_per_device": (
+                getattr(mem, "argument_size_in_bytes", 0)
+                + getattr(mem, "output_size_in_bytes", 0)
+                + getattr(mem, "temp_size_in_bytes", 0)
+                - getattr(mem, "alias_size_in_bytes", 0)),
+        },
+        "cost": {k: float(v) for k, v in (cost or {}).items()
+                 if isinstance(v, (int, float))},
+        "collective_payload_bytes": coll,
+        "roofline": rl.to_json(),
+    }
+    if verbose:
+        print(f"[{arch} × {shape_name} × {mesh_name}] OK  "
+              f"compile={t_compile:.1f}s  "
+              f"peak/dev={rec['memory']['peak_per_device']/2**30:.2f}GiB  "
+              f"flops={rec['cost'].get('flops', 0):.3e}  "
+              f"coll={coll.get('total', 0):.3e}B  "
+              f"bottleneck={rl.bottleneck}")
+    return rec
+
+
+def save_record(rec: dict):
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    suffix = "__pallas" if rec.get("attn_sub") else ""
+    name = f"{rec['arch']}__{rec['shape']}__{rec['mesh']}{suffix}.json"
+    with open(os.path.join(RESULTS_DIR, name), "w") as f:
+        json.dump(rec, f, indent=1)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--strategy", default="dynamic")
+    ap.add_argument("--attn-sub", action="store_true",
+                    help="substitute the Pallas attention kernels' cost "
+                         "model for the tagged scopes")
+    ap.add_argument("--remat-policy", default="full",
+                    choices=("full", "dots"))
+    args = ap.parse_args()
+
+    archs = list_archs() if args.all or not args.arch else [args.arch]
+    shapes = list(SHAPES) if args.all or not args.shape else [args.shape]
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+
+    failures = []
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                try:
+                    rec = run_cell(arch, shape, multi_pod=mp,
+                                   strategy=args.strategy,
+                                   attn_sub=args.attn_sub,
+                                   remat_policy=args.remat_policy)
+                    save_record(rec)
+                    if rec["status"] == "skipped":
+                        print(f"[{arch} × {shape} × "
+                              f"{'pod2x16x16' if mp else 'pod16x16'}] "
+                              f"SKIP: {rec['reason']}")
+                except Exception as e:
+                    traceback.print_exc()
+                    failures.append((arch, shape, mp, str(e)[:200]))
+    if failures:
+        print(f"\n{len(failures)} FAILURES:")
+        for f in failures:
+            print(" ", f)
+        raise SystemExit(1)
+    print("\nall dry-run cells OK")
+
+
+if __name__ == "__main__":
+    main()

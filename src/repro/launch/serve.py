@@ -1,0 +1,61 @@
+"""Serving launcher: batched engine over a (smoke-sized) model.
+
+  python -m repro.launch.serve --arch chatglm3-6b --smoke \
+      --requests 16 --max-new 16 --strategy dynamic
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from ..configs import get_config, get_smoke_config
+from ..core.strategies import get_strategy
+from ..models.layers import MeshInfo
+from ..models.registry import build_model
+from ..serve import Request, ServeConfig, ServeEngine
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="chatglm3-6b")
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--max-batch", type=int, default=4)
+    ap.add_argument("--s-max", type=int, default=128)
+    ap.add_argument("--strategy", default="dynamic")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    model = build_model(cfg, MeshInfo(tp=1, dp=1))
+    segs, _ = model.build_segments("prefill", 1, 32, s_max=args.s_max)
+    params = model._init_from_segments(segs, jax.random.PRNGKey(0))
+    eng = ServeEngine(model, params, get_strategy(args.strategy),
+                      ServeConfig(max_batch=args.max_batch,
+                                  s_max=args.s_max,
+                                  prefill_buckets=(16, 32, 64)))
+    rng = np.random.default_rng(args.seed)
+    t0 = time.perf_counter()
+    for i in range(args.requests):
+        n = int(rng.integers(4, 30))
+        eng.submit(Request(rid=i,
+                           prompt=rng.integers(0, cfg.vocab, n,
+                                               dtype=np.int32),
+                           max_new_tokens=args.max_new))
+    done = eng.run()
+    dt = time.perf_counter() - t0
+    toks = sum(len(r.output) for r in done)
+    print(f"served {len(done)} requests, {toks} tokens in {dt:.2f}s "
+          f"({toks/dt:.1f} tok/s)  stats={eng.stats}")
+    ttfts = [r.first_token_s - r.submitted_s for r in done]
+    print(f"TTFT p50={np.percentile(ttfts, 50)*1e3:.0f}ms "
+          f"p99={np.percentile(ttfts, 99)*1e3:.0f}ms")
+    return done
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,107 @@
+"""Global input/param sharding construction for the production mesh.
+
+Everything the model knows locally (per-shard shapes from MeshInfo) is
+lifted to global ShapeDtypeStructs + PartitionSpecs here:
+
+  * params: ``model.param_pspecs(segs)`` tuples -> PartitionSpec
+  * batch inputs: batch dim sharded over ('pod','data'); sequence dim of
+    SP-sharded inputs ('vis') over 'model'
+  * decode caches: batch dim over data axes, head/channel dim over
+    'model' per ``model.decode_cache_layout()``
+  * when global_batch < dp_total the batch is replicated over the data
+    axes (the long_500k single-request case) — each data row redundantly
+    computes the same step.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+
+def _entry(e):
+    if e is None or e == ():
+        return None
+    if isinstance(e, str):
+        return e
+    return e[0] if len(e) == 1 else tuple(e)
+
+
+def spec_to_p(spec) -> P:
+    if spec is None:
+        return P()
+    return P(*[_entry(e) for e in spec])
+
+
+def param_pspec_tree(model, segs):
+    """Tree of PartitionSpec matching the (stacked) param tree."""
+    return jax.tree_util.tree_map(
+        spec_to_p, model.param_pspecs(segs),
+        is_leaf=lambda x: isinstance(x, tuple))
+
+
+def global_param_specs(model, segs, mesh):
+    """(ShapeDtypeStruct tree, NamedSharding tree) for the global params.
+    ``Param.global_shape`` (declared at construction from the MeshInfo) is
+    the global view; the pspec tree gives the matching PartitionSpecs."""
+    shapes = model.param_shapes(segs, global_=True)
+    pspecs = param_pspec_tree(model, segs)
+    shds = jax.tree_util.tree_map(
+        lambda spec: NamedSharding(mesh, spec), pspecs,
+        is_leaf=lambda x: isinstance(x, P))
+    return shapes, shds
+
+
+# special per-input extra sharding: name -> (dim, axis)
+EXTRA_INPUT_SHARD = {"vis": (1, "model")}
+
+
+def global_batch_specs(model, phase: str, seq_len: int, global_batch: int,
+                       mesh, s_max: int = 0):
+    """Global (sds, NamedSharding) dicts for the step's batch inputs
+    (+ decode caches).  Returns (sds, shardings, B_loc, replicated)."""
+    axis = dict(zip(mesh.axis_names, mesh.devices.shape))
+    dp_total = axis.get("data", 1) * axis.get("pod", 1)
+    tp = axis.get("model", 1)
+    dp_axes = tuple(a for a in ("pod", "data") if a in axis)
+    replicated = global_batch < dp_total
+    B_loc = max(1, global_batch // dp_total)
+
+    binputs = model.batch_inputs(phase, B_loc, seq_len, s_max=s_max)
+    sdss, shds = {}, {}
+    for name, (sds, bd) in binputs.items():
+        gshape = list(sds.shape)
+        dims = [None] * len(gshape)
+        if bd is not None and not replicated:
+            gshape[bd] *= dp_total
+            dims[bd] = dp_axes if len(dp_axes) > 1 else dp_axes[0]
+        if name in EXTRA_INPUT_SHARD:
+            d, ax = EXTRA_INPUT_SHARD[name]
+            gshape[d] *= axis.get(ax, 1)
+            dims[d] = ax
+        sdss[name] = jax.ShapeDtypeStruct(tuple(gshape), sds.dtype)
+        shds[name] = NamedSharding(mesh, P(*dims))
+    if phase == "decode":
+        layout = model.decode_cache_layout()
+        for name, sds in model.decode_cache_env(B_loc, s_max).items():
+            bd, md = layout[name]
+            gshape = list(sds.shape)
+            dims = [None] * len(gshape)
+            if not replicated:
+                gshape[bd] *= dp_total
+                dims[bd] = dp_axes if len(dp_axes) > 1 else dp_axes[0]
+            gshape[md] = gshape[md] * tp
+            dims[md] = "model"
+            sdss[name] = jax.ShapeDtypeStruct(tuple(gshape), sds.dtype)
+            shds[name] = NamedSharding(mesh, P(*dims))
+    return sdss, shds, B_loc, replicated
+
+
+def shard_specs_of(shardings):
+    """NamedSharding tree -> PartitionSpec tree (for shard_map specs)."""
+    return jax.tree_util.tree_map(
+        lambda s: s.spec, shardings,
+        is_leaf=lambda x: isinstance(x, NamedSharding))

@@ -1,0 +1,169 @@
+"""Step-function builders shared by dryrun.py / train.py / serve.py.
+
+Each builder returns ``(fn, in_sdss, in_shardings, arg_donate)`` where
+``fn`` is the jit-able global function (shard_map already applied),
+``in_sdss`` the global ShapeDtypeStructs to lower with, and
+``in_shardings`` the matching NamedShardings.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from ..configs.base import ArchConfig, ShapeConfig
+from ..core.scheduler import OpSchedulerBase, ScheduleContext
+from ..models.base import build_forward
+from ..train.step import TrainStepConfig, build_train_step
+from .mesh import mesh_shape_dict
+from .sharding import (global_batch_specs, global_param_specs,
+                       param_pspec_tree, shard_specs_of)
+
+
+def _dp_axes(mesh):
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def _sched_info(arch, shape: ShapeConfig, B_loc, mesh):
+    return ScheduleContext(
+        local_batch=B_loc, global_batch=shape.global_batch,
+        seq_len=shape.seq_len, phase=shape.kind, arch=arch,
+        mesh_shape=mesh_shape_dict(mesh))
+
+
+def _shard_map(fn, mesh, in_specs, out_specs):
+    return jax.shard_map(fn, mesh=mesh, in_specs=in_specs,
+                         out_specs=out_specs, check_vma=False)
+
+
+def _opt_specs(param_sdss, param_specs):
+    """Mirror param sharding for AdamW m/v (f32) + replicated count."""
+    def leafy(t, fn):
+        return jax.tree_util.tree_map(fn, t)
+
+    m_sdss = leafy(param_sdss, lambda s: jax.ShapeDtypeStruct(
+        s.shape, jnp.float32))
+    state_sdss = jax.tree_util.tree_map(
+        lambda s: {"m": s, "v": s}, m_sdss,
+        is_leaf=lambda x: hasattr(x, "shape"))
+    state_specs = jax.tree_util.tree_map(
+        lambda p: {"m": p, "v": p}, param_specs,
+        is_leaf=lambda x: isinstance(x, P))
+    return ({"state": state_sdss, "count": jax.ShapeDtypeStruct((), jnp.int32)},
+            {"state": state_specs, "count": P()})
+
+
+def build_global_train_step(model, scheduler: OpSchedulerBase,
+                            shape: ShapeConfig, mesh,
+                            tcfg: TrainStepConfig = None,
+                            remat_policy: str = "full"):
+    tcfg = tcfg or TrainStepConfig(remat=True, remat_policy=remat_policy)
+    batch_sdss, batch_shd, B_loc, _ = global_batch_specs(
+        model, "train", shape.seq_len, shape.global_batch, mesh)
+    info = _sched_info(model.cfg.name, shape, B_loc, mesh)
+    step, segs, _, init_opt = build_train_step(
+        model, scheduler, B_loc, shape.seq_len, tcfg, info)
+    p_sdss, p_shd = global_param_specs(model, segs, mesh)
+    p_specs = shard_specs_of(p_shd)
+    opt_sdss, opt_specs = _opt_specs(p_sdss, p_specs)
+    batch_specs = shard_specs_of(batch_shd)
+    metric_specs = {"loss": P(), "grad_norm": P(), "lr": P(), "tokens": P()}
+    fn = _shard_map(step, mesh,
+                    in_specs=(p_specs, opt_specs, batch_specs, P()),
+                    out_specs=(p_specs, opt_specs, metric_specs))
+    in_sdss = (p_sdss, opt_sdss, batch_sdss,
+               jax.ShapeDtypeStruct((), jnp.int32))
+    opt_shd = jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), opt_specs,
+        is_leaf=lambda x: isinstance(x, P))
+    in_shd = (p_shd, opt_shd, batch_shd, NamedSharding(mesh, P()))
+    return fn, in_sdss, in_shd, (0, 1), init_opt, segs
+
+
+def _logits_spec(mesh, replicated):
+    dp = _dp_axes(mesh)
+    b = None if replicated else (dp if len(dp) > 1 else dp[0])
+    return P(b, None, "model")
+
+
+def _kv_collect_specs(out_env, mesh, replicated):
+    """PartitionSpecs for prefill-collected kv stacks by rank."""
+    dp = _dp_axes(mesh)
+    b = None if replicated else (dp if len(dp) > 1 else dp[0])
+    specs = {}
+    for k, v in out_env.items():
+        if v.ndim == 5:
+            specs[k] = P(None, b, None, "model", None)
+        else:
+            specs[k] = P(b, None, "model", None)
+    return specs
+
+
+def build_global_prefill_step(model, scheduler: OpSchedulerBase,
+                              shape: ShapeConfig, mesh):
+    batch_sdss, batch_shd, B_loc, repl = global_batch_specs(
+        model, "prefill", shape.seq_len, shape.global_batch, mesh,
+        s_max=shape.seq_len)
+    info = _sched_info(model.cfg.name, shape, B_loc, mesh)
+    segs, binputs = model.build_segments("prefill", B_loc, shape.seq_len,
+                                         s_max=shape.seq_len)
+    fwd = build_forward(segs, scheduler, info)
+    p_sdss, p_shd = global_param_specs(model, segs, mesh)
+    p_specs = shard_specs_of(p_shd)
+    batch_specs = shard_specs_of(batch_shd)
+
+    # collected kv env keys + their local shapes (from the traced graphs)
+    kv_shapes = {}
+    for seg in segs:
+        for k in seg.scan_outputs:
+            ref = seg.graph.tensors[seg.graph.outputs[k]]
+            shape = ((seg.count,) + ref.shape if seg.count > 1
+                     else ref.shape)
+            kv_shapes[seg.collect_key(k)] = jax.ShapeDtypeStruct(
+                shape, ref.dtype)
+
+    def prefill_step(params, batch):
+        out = fwd(params, batch)
+        res = {"logits": out["logits"]}
+        for k in kv_shapes:
+            res[k] = out[k]
+        return res
+
+    out_specs = {"logits": _logits_spec(mesh, repl)}
+    out_specs.update(_kv_collect_specs(kv_shapes, mesh, repl))
+    fn = _shard_map(prefill_step, mesh,
+                    in_specs=(p_specs, batch_specs),
+                    out_specs=out_specs)
+    return fn, (p_sdss, batch_sdss), (p_shd, batch_shd), (), segs
+
+
+def build_global_decode_step(model, scheduler: OpSchedulerBase,
+                             shape: ShapeConfig, mesh):
+    s_max = shape.seq_len
+    batch_sdss, batch_shd, B_loc, repl = global_batch_specs(
+        model, "decode", shape.seq_len, shape.global_batch, mesh,
+        s_max=s_max)
+    info = _sched_info(model.cfg.name, shape, B_loc, mesh)
+    segs, binputs = model.build_segments("decode", B_loc, 1, s_max=s_max)
+    fwd = build_forward(segs, scheduler, info)
+    p_sdss, p_shd = global_param_specs(model, segs, mesh)
+    p_specs = shard_specs_of(p_shd)
+    batch_specs = shard_specs_of(batch_shd)
+    cache_keys = sorted(model.decode_cache_env(B_loc, s_max))
+
+    def decode_step(params, batch):
+        out = fwd(params, batch)
+        res = {"logits": out["logits"]}
+        for k in cache_keys:
+            res[k] = out[k]
+        return res
+
+    out_specs = {"logits": _logits_spec(mesh, repl)}
+    for k in cache_keys:
+        out_specs[k] = batch_specs[k]
+    fn = _shard_map(decode_step, mesh,
+                    in_specs=(p_specs, batch_specs),
+                    out_specs=out_specs)
+    return fn, (p_sdss, batch_sdss), (p_shd, batch_shd), (1,), segs

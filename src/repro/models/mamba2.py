@@ -1,0 +1,401 @@
+"""Mamba2 (SSD — state-space duality) layers; mamba2-2.7b / zamba2 blocks.
+
+TP shards heads/channels over 'model'; the sequence is replicated across
+the model axis (an SSD scan is sequential in L, so Megatron-style sequence
+partition does not apply — noted in DESIGN.md §Arch-applicability).
+
+Schedulable ops per layer:  norm (memory) → in_proj (compute) →
+conv1d (memory) → ssd_scan (compute) → gated norm (memory) →
+out_proj (compute) → all-reduce (network).
+
+Decode keeps two caches per layer: conv_state (B, W-1, ch_loc) and
+ssm_state (B, H_loc, P, N) — O(1) per token, which is what makes
+``long_500k`` runnable for this family.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from ..configs.base import ArchConfig, SSMConfig
+from ..core.module import Module, Op, Param
+from ..dist import collectives as col
+from .layers import (AddOp, LinearOp, make_param, MeshInfo, PsumOp,
+                     RMSNormOp, ShardedLinear)
+
+
+def ssm_dims(cfg: ArchConfig, tp: int):
+    s = cfg.ssm
+    d_in = s.expand * cfg.d_model
+    H = d_in // s.head_dim
+    assert H % tp == 0, (H, tp)
+    H_loc = H // tp
+    d_in_loc = H_loc * s.head_dim
+    ch_loc = d_in_loc + 2 * s.n_groups * s.state  # conv channels (x,B,C)
+    return d_in, d_in_loc, H, H_loc, ch_loc
+
+
+class SSMInProj(Module):
+    """d -> [z, xBC, dt] (column parallel)."""
+
+    def __init__(self, cfg: ArchConfig, mesh: MeshInfo):
+        super().__init__()
+        s = cfg.ssm
+        d_in, d_in_loc, H, H_loc, ch_loc = ssm_dims(cfg, mesh.tp)
+        out_loc = d_in_loc + ch_loc + H_loc  # z + xBC + dt
+        self.proj = ShardedLinear(cfg.d_model, out_loc, "ssm_in", mesh)
+        self.named("in_proj")
+
+    def forward(self, x):
+        return self.proj(x)
+
+
+class Conv1dOp(Op):
+    """Causal depthwise conv over [x;B;C] channels (width W, memory-bound)."""
+
+    resource = "memory"
+
+    def __init__(self, cfg: ArchConfig, mesh: MeshInfo, name="conv1d"):
+        super().__init__()
+        s = cfg.ssm
+        _, self.d_in_loc, _, self.H_loc, self.ch_loc = ssm_dims(cfg, mesh.tp)
+        self.W = s.conv_width
+        self.cw = make_param((self.ch_loc, s.conv_width), jnp.float32,
+                             (("model",), ()), mesh,
+                             init=lambda k, sh, dt: jax.random.normal(k, sh, dt) * 0.1)
+        self.cb = make_param((self.ch_loc,), jnp.float32, (("model",),), mesh,
+                             init=lambda k, sh, dt: jnp.zeros(sh, dt))
+        self.named(name)
+
+    def kernel(self, p, zxbcdt):
+        # split z / xBC / dt
+        z = zxbcdt[..., :self.d_in_loc]
+        xbc = zxbcdt[..., self.d_in_loc:self.d_in_loc + self.ch_loc]
+        dt = zxbcdt[..., self.d_in_loc + self.ch_loc:]
+        B, L, ch = xbc.shape
+        xf = xbc.astype(jnp.float32)
+        pad = jnp.pad(xf, ((0, 0), (self.W - 1, 0), (0, 0)))
+        out = jnp.zeros_like(xf)
+        for w in range(self.W):  # width is 4: unrolled taps
+            out = out + pad[:, w:w + L, :] * p["cw"][:, w]
+        out = jax.nn.silu(out + p["cb"])
+        return z, out.astype(zxbcdt.dtype), dt
+
+
+class SSDScanOp(Op):
+    """Chunked SSD (Mamba2) over the full sequence (train/prefill).
+
+    Inputs: xbc (B,L,ch_loc) post-conv, dt (B,L,H_loc).
+    Output: y (B,L,d_in_loc).  The Pallas ssd_scan kernel replaces the jnp
+    reference on TPU.
+    """
+
+    resource = "compute"
+
+    def __init__(self, cfg: ArchConfig, mesh: MeshInfo, name="ssd_scan",
+                 impl="xla"):
+        super().__init__()
+        self.s = cfg.ssm
+        _, self.d_in_loc, _, self.H_loc, self.ch_loc = ssm_dims(cfg, mesh.tp)
+        self.impl = impl
+        H_loc, P = self.H_loc, self.s.head_dim
+        self.A_log = make_param((H_loc,), jnp.float32, (("model",),), mesh,
+                                init=lambda k, sh, dt: jnp.log(
+                                    jax.random.uniform(k, sh, dt, 1.0, 16.0)))
+        self.D = make_param((H_loc,), jnp.float32, (("model",),), mesh,
+                            init=lambda k, sh, dt: jnp.ones(sh, dt))
+        self.dt_bias = make_param((H_loc,), jnp.float32, (("model",),), mesh,
+                                  init=lambda k, sh, dt: jnp.zeros(sh, dt))
+        self.named(name)
+
+    def _split(self, xbc):
+        s = self.s
+        B, L, _ = xbc.shape
+        x = xbc[..., :self.d_in_loc]
+        Bmat = xbc[..., self.d_in_loc:self.d_in_loc + s.n_groups * s.state]
+        Cmat = xbc[..., self.d_in_loc + s.n_groups * s.state:]
+        x = x.reshape(B, L, self.H_loc, s.head_dim)
+        Bmat = Bmat.reshape(B, L, s.n_groups, s.state)
+        Cmat = Cmat.reshape(B, L, s.n_groups, s.state)
+        return x, Bmat, Cmat
+
+    def kernel(self, p, xbc, dt):
+        if self.impl == "pallas":
+            from ..kernels import ops as kops
+            x, Bm, Cm = self._split(xbc)
+            dtv = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+            A = -jnp.exp(p["A_log"])
+            y = kops.ssd_scan(x, dtv, A, Bm, Cm, p["D"], chunk=self.s.chunk)
+            return y.reshape(*y.shape[:2], -1).astype(xbc.dtype)
+        return self._ref(p, xbc, dt)
+
+    def _ref(self, p, xbc, dt):
+        s = self.s
+        x, Bm, Cm = self._split(xbc)
+        Bsz, L, H, P = x.shape
+        N = s.state
+        dtv = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])  # (B,L,H)
+        A = -jnp.exp(p["A_log"])                                      # (H,)
+        Q = min(s.chunk, L)
+        assert L % Q == 0, (L, Q)
+        nc = L // Q
+        xf = x.astype(jnp.float32).reshape(Bsz, nc, Q, H, P)
+        dtc = dtv.reshape(Bsz, nc, Q, H)
+        # n_groups==1: broadcast B/C across heads
+        Bc = Bm.astype(jnp.float32).reshape(Bsz, nc, Q, s.n_groups, N)
+        Cc = Cm.astype(jnp.float32).reshape(Bsz, nc, Q, s.n_groups, N)
+        Bc = jnp.repeat(Bc, H // s.n_groups, axis=3)
+        Cc = jnp.repeat(Cc, H // s.n_groups, axis=3)
+        dA = dtc * A[None, None, None, :]            # (B,nc,Q,H) log-decay
+        cum = jnp.cumsum(dA, axis=2)                  # inclusive cumsum
+        # intra-chunk: M[i,j] = C_i·B_j * exp(cum_i - cum_j) * dt_j, j <= i
+        Lmask = jnp.tril(jnp.ones((Q, Q), bool))
+        CB = jnp.einsum("bnihs,bnjhs->bnhij", Cc, Bc)
+        cumT = cum.swapaxes(2, 3)                     # (B,nc,H,Q)
+        # mask the EXPONENT (not the product): exp of the upper triangle
+        # overflows and poisons the backward pass through jnp.where
+        expo = cumT[..., :, None] - cumT[..., None, :]
+        expo = jnp.where(Lmask[None, None, None], expo, -jnp.inf)
+        decay = jnp.exp(expo)                         # (B,nc,H,Q,Q)
+        dtT = dtc.swapaxes(2, 3)                      # (B,nc,H,Q)
+        M = CB * decay * dtT[..., None, :]
+        y_intra = jnp.einsum("bnhij,bnjhp->bnihp", M, xf)
+        # chunk states: S_n = sum_j exp(cum_Q - cum_j) dt_j B_j x_j^T
+        last = cum[:, :, -1:, :]                      # (B,nc,1,H)
+        w = jnp.exp(last - cum) * dtc                 # (B,nc,Q,H)
+        S = jnp.einsum("bnjh,bnjhs,bnjhp->bnhsp", w, Bc, xf)
+        # inter-chunk recurrence over chunks
+        gamma = jnp.exp(last[:, :, 0, :])             # (B,nc,H) chunk decay
+
+        def step(h, inp):
+            g, Sn = inp
+            h_new = h * g[..., None, None] + Sn
+            return h_new, h
+
+        gT = jnp.moveaxis(gamma, 1, 0)                # (nc,B,H)
+        ST = jnp.moveaxis(S, 1, 0)                    # (nc,B,H,N,P)
+        h0 = jnp.zeros((Bsz, H, N, P), jnp.float32)
+        _, hprev = lax.scan(step, h0, (gT, ST))       # h before each chunk
+        hprev = jnp.moveaxis(hprev, 0, 1)             # (B,nc,H,N,P)
+        y_inter = jnp.einsum("bnihs,bnih,bnhsp->bnihp",
+                             Cc, jnp.exp(cum), hprev)
+        y = y_intra + y_inter + xf * p["D"][None, None, None, :, None]
+        return y.reshape(Bsz, L, H * P).astype(xbc.dtype)
+
+    def infer_out(self, in_shapes):
+        B, L, _ = in_shapes[0].shape
+        return jax.ShapeDtypeStruct((B, L, self.d_in_loc), in_shapes[0].dtype)
+
+    def flops_estimate(self, in_shapes):
+        B, L, _ = in_shapes[0].shape
+        s = self.s
+        return 6.0 * B * L * self.H_loc * s.head_dim * s.state
+
+
+class GatedNormOp(Op):
+    """RMSNorm(y * silu(z)) — Mamba2's gated output norm (memory)."""
+
+    resource = "memory"
+
+    def __init__(self, d_loc, mesh: MeshInfo, name="gated_norm"):
+        super().__init__()
+        self.g = make_param((d_loc,), jnp.bfloat16, (("model",),), mesh,
+                            init=lambda k, s, dt: jnp.ones(s, dt))
+        self.named(name)
+
+    def kernel(self, p, y, z):
+        v = y.astype(jnp.float32) * jax.nn.silu(z.astype(jnp.float32))
+        var = jnp.mean(v * v, axis=-1, keepdims=True)
+        return (v * lax.rsqrt(var + 1e-5)).astype(y.dtype) * p["g"]
+
+
+class Mamba2Layer(Module):
+    """Full-sequence Mamba2 block (train/prefill)."""
+
+    def __init__(self, cfg: ArchConfig, mesh: MeshInfo, attn_impl="xla"):
+        super().__init__()
+        d = cfg.d_model
+        _, d_in_loc, _, _, _ = ssm_dims(cfg, mesh.tp)
+        self.ln = RMSNormOp(d, "ln_ssm")
+        self.inp = SSMInProj(cfg, mesh)
+        self.conv = Conv1dOp(cfg, mesh)
+        self.ssd = SSDScanOp(cfg, mesh, impl=attn_impl)
+        self.gate = GatedNormOp(d_in_loc, mesh)
+        self.outp = ShardedLinear(d_in_loc, d, "ssm_out", mesh,
+                                  pspec=(("model",), ()))
+        self.ar = PsumOp(name="ar_ssm")
+        self.add = AddOp("add_ssm")
+        self.named("mamba")
+
+    def forward(self, *, x, positions=None):
+        h = self.ln(x)
+        zxbcdt = self.inp(h)
+        z, xbc, dt = self.conv(zxbcdt)
+        y = self.ssd(xbc, dt)
+        y = self.gate(y, z)
+        y = self.outp(y)
+        y = self.ar(y)
+        return {"x": self.add(x, y)}
+
+
+class SSDDecodeOp(Op):
+    """One-token SSD state update (memory-bound decode step).
+
+    Inputs: xbc (B,1,ch_loc), dt (B,1,H_loc), conv handled upstream;
+            ssm_state (B,H_loc,N,P).
+    Outputs: y (B,1,d_in_loc), new ssm_state."""
+
+    resource = "memory"
+
+    def __init__(self, cfg: ArchConfig, mesh: MeshInfo, name="ssd_decode"):
+        super().__init__()
+        self.s = cfg.ssm
+        _, self.d_in_loc, _, self.H_loc, self.ch_loc = ssm_dims(cfg, mesh.tp)
+        self.A_log = make_param((self.H_loc,), jnp.float32, (("model",),), mesh,
+                                init=lambda k, sh, dt: jnp.log(
+                                    jax.random.uniform(k, sh, dt, 1.0, 16.0)))
+        self.D = make_param((self.H_loc,), jnp.float32, (("model",),), mesh,
+                            init=lambda k, sh, dt: jnp.ones(sh, dt))
+        self.dt_bias = make_param((self.H_loc,), jnp.float32, (("model",),),
+                                  mesh,
+                                  init=lambda k, sh, dt: jnp.zeros(sh, dt))
+        self.named(name)
+
+    def kernel(self, p, xbc, dt, state):
+        s = self.s
+        Bsz = xbc.shape[0]
+        H, P, N = self.H_loc, s.head_dim, s.state
+        x = xbc[:, 0, :self.d_in_loc].astype(jnp.float32).reshape(Bsz, H, P)
+        Bm = xbc[:, 0, self.d_in_loc:self.d_in_loc + s.n_groups * N]
+        Cm = xbc[:, 0, self.d_in_loc + s.n_groups * N:]
+        Bm = jnp.repeat(Bm.astype(jnp.float32).reshape(Bsz, s.n_groups, N),
+                        H // s.n_groups, axis=1)
+        Cm = jnp.repeat(Cm.astype(jnp.float32).reshape(Bsz, s.n_groups, N),
+                        H // s.n_groups, axis=1)
+        dtv = jax.nn.softplus(dt[:, 0].astype(jnp.float32) + p["dt_bias"])
+        a = jnp.exp(dtv * (-jnp.exp(p["A_log"])))      # (B,H)
+        statef = state.astype(jnp.float32)
+        new = statef * a[..., None, None] + \
+            jnp.einsum("bh,bhs,bhp->bhsp", dtv, Bm, x)
+        y = jnp.einsum("bhs,bhsp->bhp", Cm, new) + x * p["D"][None, :, None]
+        return (y.reshape(Bsz, 1, H * P).astype(xbc.dtype),
+                new.astype(state.dtype))
+
+    def infer_out(self, in_shapes):
+        xbc, dt, state = in_shapes
+        B = xbc.shape[0]
+        return (jax.ShapeDtypeStruct((B, 1, self.d_in_loc), xbc.dtype),
+                jax.ShapeDtypeStruct(state.shape, state.dtype))
+
+
+class ConvDecodeOp(Op):
+    """One-token causal conv using the rolling conv_state cache."""
+
+    resource = "memory"
+
+    def __init__(self, cfg: ArchConfig, mesh: MeshInfo, name="conv_decode"):
+        super().__init__()
+        s = cfg.ssm
+        _, self.d_in_loc, _, self.H_loc, self.ch_loc = ssm_dims(cfg, mesh.tp)
+        self.W = s.conv_width
+        self.cw = make_param((self.ch_loc, s.conv_width), jnp.float32,
+                             (("model",), ()), mesh,
+                             init=lambda k, sh, dt: jax.random.normal(k, sh, dt) * 0.1)
+        self.cb = make_param((self.ch_loc,), jnp.float32, (("model",),), mesh,
+                             init=lambda k, sh, dt: jnp.zeros(sh, dt))
+        self.named(name)
+
+    def kernel(self, p, zxbcdt, conv_state):
+        # conv_state (B, W-1, ch): previous raw xBC inputs
+        z = zxbcdt[..., :self.d_in_loc]
+        xbc = zxbcdt[:, 0, self.d_in_loc:self.d_in_loc + self.ch_loc]
+        dt = zxbcdt[..., self.d_in_loc + self.ch_loc:]
+        window = jnp.concatenate(
+            [conv_state.astype(jnp.float32), xbc[:, None].astype(jnp.float32)], 1)
+        out = jnp.einsum("bwc,cw->bc", window, p["cw"]) + p["cb"]
+        out = jax.nn.silu(out)[:, None]
+        new_state = window[:, 1:].astype(conv_state.dtype)
+        return z, out.astype(zxbcdt.dtype), dt, new_state
+
+    def infer_out(self, in_shapes):
+        zx, cs = in_shapes
+        B = zx.shape[0]
+        return (jax.ShapeDtypeStruct((B, 1, self.d_in_loc), zx.dtype),
+                jax.ShapeDtypeStruct((B, 1, self.ch_loc), zx.dtype),
+                jax.ShapeDtypeStruct((B, 1, zx.shape[-1] - self.d_in_loc
+                                      - self.ch_loc), zx.dtype),
+                jax.ShapeDtypeStruct(cs.shape, cs.dtype))
+
+
+class Mamba2DecodeLayer(Module):
+    def __init__(self, cfg: ArchConfig, mesh: MeshInfo):
+        super().__init__()
+        d = cfg.d_model
+        _, d_in_loc, _, _, _ = ssm_dims(cfg, mesh.tp)
+        self.ln = RMSNormOp(d, "ln_ssm")
+        self.inp = SSMInProj(cfg, mesh)
+        self.conv = ConvDecodeOp(cfg, mesh)
+        self.ssd = SSDDecodeOp(cfg, mesh)
+        self.gate = GatedNormOp(d_in_loc, mesh)
+        self.outp = ShardedLinear(d_in_loc, d, "ssm_out", mesh,
+                                  pspec=(("model",), ()))
+        self.ar = PsumOp(name="ar_ssm")
+        self.add = AddOp("add_ssm")
+        self.named("mamba")
+
+    def forward(self, *, x, conv_state, ssm_state, positions=None,
+                cache_len=None):
+        h = self.ln(x)
+        zxbcdt = self.inp(h)
+        z, xbc, dt, conv_state = self.conv(zxbcdt, conv_state)
+        y, ssm_state = self.ssd(xbc, dt, ssm_state)
+        y = self.gate(y, z)
+        y = self.outp(y)
+        y = self.ar(y)
+        return {"x": self.add(x, y), "conv_state": conv_state,
+                "ssm_state": ssm_state}
+
+
+from .base import EmbedSegment, LMBase, LogitsHead, TrainHead  # noqa: E402
+
+
+class Mamba2LM(LMBase):
+    family = "ssm"
+
+    def __init__(self, cfg: ArchConfig, mesh: MeshInfo):
+        super().__init__(cfg, mesh)
+
+    def make_embed(self, phase):
+        return EmbedSegment(self.cfg, self.mesh, sp=False)
+
+    def layer_stacks(self, phase):
+        cfg, mesh = self.cfg, self.mesh
+        if phase == "decode":
+            mod = Mamba2DecodeLayer(cfg, mesh)
+            return [("layers", mod, cfg.n_layers,
+                     ("conv_state", "ssm_state"), ("conv_state", "ssm_state"))]
+        mod = Mamba2Layer(cfg, mesh)
+        return [("layers", mod, cfg.n_layers, (), ())]
+
+    def make_head(self, phase):
+        if phase == "train":
+            return TrainHead(self.cfg, self.mesh, sp=False)
+        return LogitsHead(self.cfg, self.mesh, sp=False)
+
+    def cache_specs(self, stack_name, B_loc, s_max):
+        s = self.cfg.ssm
+        _, d_in_loc, _, H_loc, ch_loc = ssm_dims(self.cfg, self.mesh.tp)
+        return {
+            "conv_state": jax.ShapeDtypeStruct(
+                (B_loc, s.conv_width - 1, ch_loc), jnp.bfloat16),
+            "ssm_state": jax.ShapeDtypeStruct(
+                (B_loc, H_loc, s.state, s.head_dim), jnp.bfloat16),
+        }
+
+    def seq_local(self, phase, S):
+        return S  # no SP for SSD (sequential scan)

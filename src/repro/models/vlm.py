@@ -1,0 +1,47 @@
+"""Qwen2-VL backbone (M-RoPE dense LM).  The ViT frontend is a STUB per
+the assignment: ``vis`` arrives as precomputed patch embeddings already
+aligned to the token sequence (zero at pure-text positions) and is added
+to the token embedding.  M-RoPE position streams (3, B, S) are a model
+input (t/h/w positions computed by the preprocessing stub)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from .base import EmbedSegment, LMBase
+from .layers import AddOp, EmbedOp, MeshInfo, PsumOp, ReduceScatterOp
+from .transformer import DenseLM
+
+
+class VLMEmbedSegment(EmbedSegment):
+    """Token embedding + precomputed patch embeddings (stub frontend).
+
+    With SP the patch embeddings arrive sequence-sharded (the launch layer
+    shards dim 1 over 'model'), matching the reduce-scattered token path.
+    """
+
+    def __init__(self, cfg: ArchConfig, mesh: MeshInfo, sp: bool):
+        super().__init__(cfg, mesh, sp)
+        self.add_vis = AddOp("add_vis")
+
+    def forward(self, *, ids, vis):
+        return {"x": self.add_vis(self.finish(self.emb(ids)), vis)}
+
+
+class VLM(DenseLM):
+    family = "vlm"
+
+    def make_embed(self, phase):
+        sp = self.cfg.seq_parallel and phase != "decode"
+        if phase == "decode":
+            return EmbedSegment(self.cfg, self.mesh, sp)
+        return VLMEmbedSegment(self.cfg, self.mesh, sp)
+
+    def batch_inputs(self, phase, B_loc, S, s_max=0):
+        out = super().batch_inputs(phase, B_loc, S, s_max)
+        if phase != "decode":
+            S_loc = self.seq_local(phase, S)
+            out["vis"] = (jax.ShapeDtypeStruct(
+                (B_loc, S_loc, self.cfg.d_model), jnp.bfloat16), 0)
+        return out

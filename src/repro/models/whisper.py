@@ -1,0 +1,371 @@
+"""Whisper-tiny backbone: encoder-decoder transformer.
+
+The conv/audio frontend is a STUB per the assignment: ``frames`` arrive as
+precomputed (B, S, d_model) frame embeddings.  Encoder = bidirectional
+self-attention stack; decoder = causal self-attention + cross-attention
+over the encoder states + MLP.  Positions are sinusoidal (whisper uses
+learned decoder positions; sinusoidal keeps params shape-independent —
+noted in DESIGN.md).
+
+Decode: self-attn uses a KV cache; cross-attn recomputes K/V from the
+(static) encoder states each step — correct and static-shaped; the serve
+engine holds ``enc`` and feeds it as a step input.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs.base import ArchConfig
+from ..core import trace
+from ..core.module import Module, Op
+from .base import LMBase, LogitsHead, Segment, TrainHead
+from .layers import (AddOp, AttentionOp, DecodeAttentionOp, EmbedOp, GELUOp,
+                     HeadLayout, MeshInfo, MLPBlock, OProj, PsumOp, QKVProj,
+                     RMSNormOp, ShardedLinear, _QKVSplit)
+
+
+def _sinusoid(positions, d):
+    """Sinusoidal absolute position encoding: positions (B,S) -> (B,S,d)."""
+    half = d // 2
+    freq = jnp.exp(-np.log(10000.0) * jnp.arange(half, dtype=jnp.float32)
+                   / max(half - 1, 1))
+    ang = positions.astype(jnp.float32)[..., None] * freq
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+class SinPosOp(Op):
+    """x + sinusoidal(position) (memory-bound)."""
+
+    resource = "memory"
+
+    def __init__(self, name="sinpos"):
+        super().__init__()
+        self.named(name)
+
+    def kernel(self, p, x, positions):
+        return x + _sinusoid(positions, x.shape[-1]).astype(x.dtype)
+
+
+class EncPosOp(Op):
+    """x + sinusoidal(arange(S)) for the encoder (no positions input)."""
+
+    resource = "memory"
+
+    def __init__(self, name="enc_pos"):
+        super().__init__()
+        self.named(name)
+
+    def kernel(self, p, x):
+        B, S, d = x.shape
+        pos = jnp.arange(S, dtype=jnp.int32)[None, :]
+        return x + _sinusoid(pos, d).astype(x.dtype)
+
+
+class CrossKVProj(Module):
+    """K/V projection of the encoder states for cross-attention."""
+
+    def __init__(self, d, layout: HeadLayout, mesh: MeshInfo, name="cross_kv",
+                 dtype=jnp.bfloat16):
+        super().__init__()
+        lay = layout
+        out = 2 * lay.kv_local * lay.head_dim
+        self.proj = ShardedLinear(d, out, "kv_proj", mesh, dtype=dtype)
+        self.split = _KVSplit(lay).named("kv_split")
+        self.named(name)
+
+    def forward(self, enc):
+        return self.split(self.proj(enc))
+
+
+class _KVSplit(Op):
+    resource = "memory"
+
+    def __init__(self, lay: HeadLayout):
+        super().__init__()
+        self.lay = lay
+
+    def kernel(self, p, kv):
+        lay = self.lay
+        hd = lay.head_dim
+        B, S, _ = kv.shape
+        nk = lay.kv_local * hd
+        k = kv[..., :nk].reshape(B, S, lay.kv_local, hd)
+        v = kv[..., nk:].reshape(B, S, lay.kv_local, hd)
+        return k, v
+
+
+class QOnlyProj(Module):
+    """Q projection for cross-attention (decoder side)."""
+
+    def __init__(self, d, layout: HeadLayout, mesh: MeshInfo, name="cross_q",
+                 dtype=jnp.bfloat16):
+        super().__init__()
+        lay = layout
+        self.lay = lay
+        self.proj = ShardedLinear(d, lay.q_local * lay.head_dim, "q_proj",
+                                  mesh, dtype=dtype)
+        self.split = _QReshape(lay).named("q_reshape")
+        self.named(name)
+
+    def forward(self, x):
+        return self.split(self.proj(x))
+
+
+class _QReshape(Op):
+    resource = "memory"
+
+    def __init__(self, lay: HeadLayout):
+        super().__init__()
+        self.lay = lay
+
+    def kernel(self, p, q):
+        B, S, _ = q.shape
+        return q.reshape(B, S, self.lay.q_local, self.lay.head_dim)
+
+
+class WhisperEncoderLayer(Module):
+    """Bidirectional self-attention + GELU MLP (pre-norm)."""
+
+    def __init__(self, cfg: ArchConfig, mesh: MeshInfo, attn_impl="xla"):
+        super().__init__()
+        d = cfg.d_model
+        lay = HeadLayout(cfg.n_heads, cfg.n_kv, mesh.tp, cfg.hd)
+        self.ln1 = RMSNormOp(d, "ln_attn")
+        self.qkv = QKVProj(d, lay, mesh)
+        self.attn = AttentionOp(lay, causal=False, impl=mesh.attn_impl)
+        self.oproj = OProj(d, lay, mesh)
+        self.ar1 = PsumOp(name="ar_attn")
+        self.add1 = AddOp("add_attn")
+        self.ln2 = RMSNormOp(d, "ln_mlp")
+        self.mlp = MLPBlock(d, cfg.d_ff, mesh, act="gelu")
+        self.ar2 = PsumOp(name="ar_mlp")
+        self.add2 = AddOp("add_mlp")
+        self.named("enc_layer")
+
+    def forward(self, *, x):
+        h = self.ln1(x)
+        q, k, v = self.qkv(h)
+        a = self.oproj(self.attn(q, k, v))
+        x = self.add1(x, self.ar1(a))
+        m = self.mlp(self.ln2(x))
+        x = self.add2(x, self.ar2(m))
+        return {"x": x}
+
+
+class WhisperDecoderLayer(Module):
+    """Causal self-attn + cross-attn(enc) + GELU MLP (train/prefill)."""
+
+    def __init__(self, cfg: ArchConfig, mesh: MeshInfo, collect_kv=False):
+        super().__init__()
+        d = cfg.d_model
+        lay = HeadLayout(cfg.n_heads, cfg.n_kv, mesh.tp, cfg.hd)
+        self.collect_kv = collect_kv
+        self.ln1 = RMSNormOp(d, "ln_self")
+        self.qkv = QKVProj(d, lay, mesh)
+        self.attn = AttentionOp(lay, causal=True, name="self_attention",
+                                impl=mesh.attn_impl)
+        self.oproj = OProj(d, lay, mesh)
+        self.ar1 = PsumOp(name="ar_self")
+        self.add1 = AddOp("add_self")
+        self.ln2 = RMSNormOp(d, "ln_cross")
+        self.q_proj = QOnlyProj(d, lay, mesh)
+        self.kv_proj = CrossKVProj(d, lay, mesh)
+        self.xattn = AttentionOp(lay, causal=False, name="cross_attention",
+                                 impl=mesh.attn_impl)
+        self.xoproj = OProj(d, lay, mesh, name="x_o_proj")
+        self.ar2 = PsumOp(name="ar_cross")
+        self.add2 = AddOp("add_cross")
+        self.ln3 = RMSNormOp(d, "ln_mlp")
+        self.mlp = MLPBlock(d, cfg.d_ff, mesh, act="gelu")
+        self.ar3 = PsumOp(name="ar_mlp")
+        self.add3 = AddOp("add_mlp")
+        self.named("dec_layer")
+
+    def forward(self, *, x, enc):
+        h = self.ln1(x)
+        q, k, v = self.qkv(h)
+        a = self.oproj(self.attn(q, k, v))
+        x = self.add1(x, self.ar1(a))
+        h = self.ln2(x)
+        qx = self.q_proj(h)
+        kx, vx = self.kv_proj(enc)
+        a = self.xoproj(self.xattn(qx, kx, vx))
+        x = self.add2(x, self.ar2(a))
+        m = self.mlp(self.ln3(x))
+        x = self.add3(x, self.ar3(m))
+        out = {"x": x}
+        if self.collect_kv:
+            out["k"], out["v"] = k, v
+        return out
+
+
+class WhisperDecodeLayer(Module):
+    """Decode: self-attn against KV cache + cross-attn over static enc."""
+
+    def __init__(self, cfg: ArchConfig, mesh: MeshInfo):
+        super().__init__()
+        d = cfg.d_model
+        lay = HeadLayout(cfg.n_heads, cfg.n_kv, mesh.tp, cfg.hd)
+        self.ln1 = RMSNormOp(d, "ln_self")
+        self.qkv = QKVProj(d, lay, mesh)
+        self.attn = DecodeAttentionOp(lay)
+        self.oproj = OProj(d, lay, mesh)
+        self.ar1 = PsumOp(name="ar_self")
+        self.add1 = AddOp("add_self")
+        self.ln2 = RMSNormOp(d, "ln_cross")
+        self.q_proj = QOnlyProj(d, lay, mesh)
+        self.kv_proj = CrossKVProj(d, lay, mesh)
+        self.xattn = AttentionOp(lay, causal=False, name="cross_attention",
+                                 impl=mesh.attn_impl)
+        self.xoproj = OProj(d, lay, mesh, name="x_o_proj")
+        self.ar2 = PsumOp(name="ar_cross")
+        self.add2 = AddOp("add_cross")
+        self.ln3 = RMSNormOp(d, "ln_mlp")
+        self.mlp = MLPBlock(d, cfg.d_ff, mesh, act="gelu")
+        self.ar3 = PsumOp(name="ar_mlp")
+        self.add3 = AddOp("add_mlp")
+        self.named("dec_layer")
+
+    def forward(self, *, x, enc, cache_len, k_cache, v_cache):
+        h = self.ln1(x)
+        q, k, v = self.qkv(h)
+        a, kc, vc = self.attn(q, k, v, k_cache, v_cache, cache_len)
+        a = self.oproj(a)
+        x = self.add1(x, self.ar1(a))
+        h = self.ln2(x)
+        qx = self.q_proj(h)
+        kx, vx = self.kv_proj(enc)
+        a = self.xoproj(self.xattn(qx, kx, vx))
+        x = self.add2(x, self.ar2(a))
+        m = self.mlp(self.ln3(x))
+        x = self.add3(x, self.ar3(m))
+        return {"x": x, "k_cache": kc, "v_cache": vc}
+
+
+class WhisperEncEmbed(Module):
+    """Stub frontend output -> encoder input (adds sinusoidal positions)."""
+
+    def __init__(self, cfg: ArchConfig):
+        super().__init__()
+        self.pos = EncPosOp()
+        self.named("enc_embed")
+
+    def forward(self, *, frames):
+        return {"x": self.pos(frames)}
+
+
+class WhisperDecEmbed(Module):
+    def __init__(self, cfg: ArchConfig, mesh: MeshInfo):
+        super().__init__()
+        self.emb = EmbedOp(cfg.vocab, cfg.d_model, mesh)
+        self.finish = PsumOp(name="embed_ar")
+        self.pos = SinPosOp()
+        self.named("embed")
+
+    def forward(self, *, ids, positions):
+        return {"x": self.pos(self.finish(self.emb(ids)), positions)}
+
+
+class WhisperLM(LMBase):
+    family = "encdec"
+
+    def __init__(self, cfg: ArchConfig, mesh: MeshInfo):
+        super().__init__(cfg, mesh)
+        self.layout = HeadLayout(cfg.n_heads, cfg.n_kv, mesh.tp, cfg.hd)
+
+    # -- inputs ---------------------------------------------------------------
+    def batch_inputs(self, phase, B_loc, S, s_max=0):
+        i32, bf16 = jnp.int32, jnp.bfloat16
+        d = self.cfg.d_model
+        if phase == "train":
+            return {
+                "frames": (jax.ShapeDtypeStruct((B_loc, S, d), bf16), 0),
+                "ids": (jax.ShapeDtypeStruct((B_loc, S), i32), 0),
+                "labels": (jax.ShapeDtypeStruct((B_loc, S), i32), 0),
+                "positions": (jax.ShapeDtypeStruct((B_loc, S), i32), 0),
+            }
+        if phase == "prefill":
+            return {
+                "frames": (jax.ShapeDtypeStruct((B_loc, S, d), bf16), 0),
+                "ids": (jax.ShapeDtypeStruct((B_loc, S), i32), 0),
+                "positions": (jax.ShapeDtypeStruct((B_loc, S), i32), 0),
+            }
+        return {  # decode: enc states are a step input (held by the engine)
+            "ids": (jax.ShapeDtypeStruct((B_loc, 1), i32), 0),
+            "positions": (jax.ShapeDtypeStruct((B_loc, 1), i32), 0),
+            "cache_len": (jax.ShapeDtypeStruct((B_loc,), i32), 0),
+            "enc": (jax.ShapeDtypeStruct((B_loc, s_max, d), bf16), 0),
+        }
+
+    def cache_specs(self, stack_name, B_loc, s_max):
+        lay = self.layout
+        sds = jax.ShapeDtypeStruct((B_loc, s_max, lay.kv_local, lay.head_dim),
+                                   jnp.bfloat16)
+        return {"k_cache": sds, "v_cache": sds}
+
+    def decode_cache_env(self, B_loc, s_max):
+        n = self.cfg.n_layers
+        return {k: jax.ShapeDtypeStruct((n,) + v.shape, v.dtype)
+                for k, v in self.cache_specs("decoder", B_loc, s_max).items()}
+
+    def decode_cache_layout(self):
+        return {"k_cache": (1, -2), "v_cache": (1, -2)}
+
+    # -- segments (override: encoder stack precedes decoder) -------------------
+    def build_segments(self, phase, B_loc, S, s_max=0):
+        cfg, mesh = self.cfg, self.mesh
+        binputs = self.batch_inputs(phase, B_loc, S, s_max)
+        bf16 = jnp.bfloat16
+        segs = []
+        if phase != "decode":
+            ee = WhisperEncEmbed(cfg)
+            g = trace(ee, {"frames": binputs["frames"][0]},
+                      batch_dims={"frames": 0})
+            segs.append(Segment("enc_embed", ee, g,
+                                output_map={"x": "enc"}))
+            enc_mod = WhisperEncoderLayer(cfg, mesh)
+            x_enc = jax.ShapeDtypeStruct((B_loc, S, cfg.d_model), bf16)
+            g = trace(enc_mod, {"x": x_enc}, batch_dims={"x": 0})
+            segs.append(Segment("encoder", enc_mod, g, count=cfg.enc_layers,
+                                input_map={"x": "enc"},
+                                output_map={"x": "enc"}))
+        de = WhisperDecEmbed(cfg, mesh)
+        g = trace(de, {"ids": binputs["ids"][0],
+                       "positions": binputs["positions"][0]},
+                  batch_dims={"ids": 0, "positions": 0})
+        segs.append(Segment("embed", de, g))
+        S_dec = 1 if phase == "decode" else S
+        S_enc = s_max if phase == "decode" else S
+        x_sds = jax.ShapeDtypeStruct((B_loc, S_dec, cfg.d_model), bf16)
+        enc_sds = jax.ShapeDtypeStruct((B_loc, S_enc, cfg.d_model), bf16)
+        if phase == "decode":
+            dmod = WhisperDecodeLayer(cfg, mesh)
+            lay_in = {"x": x_sds, "enc": enc_sds,
+                      "cache_len": binputs["cache_len"][0]}
+            lay_in.update(self.cache_specs("decoder", B_loc, s_max))
+            bd = {"x": 0, "enc": 0, "cache_len": 0,
+                  "k_cache": 0, "v_cache": 0}
+            g = trace(dmod, lay_in, batch_dims=bd)
+            segs.append(Segment("decoder", dmod, g, count=cfg.n_layers,
+                                scan_inputs=("k_cache", "v_cache"),
+                                scan_outputs=("k_cache", "v_cache")))
+        else:
+            dmod = WhisperDecoderLayer(cfg, mesh,
+                                       collect_kv=(phase == "prefill"))
+            g = trace(dmod, {"x": x_sds, "enc": enc_sds},
+                      batch_dims={"x": 0, "enc": 0})
+            sc_out = ("k", "v") if phase == "prefill" else ()
+            segs.append(Segment("decoder", dmod, g, count=cfg.n_layers,
+                                scan_outputs=sc_out))
+        head = (TrainHead(cfg, mesh, sp=False) if phase == "train"
+                else LogitsHead(cfg, mesh, sp=False))
+        head_in = {"x": x_sds}
+        hbd = {"x": 0}
+        if phase == "train":
+            head_in["labels"] = binputs["labels"][0]
+            hbd["labels"] = 0
+        g = trace(head, head_in, batch_dims=hbd)
+        segs.append(Segment("head", head, g))
+        return segs, binputs

@@ -1,0 +1,18 @@
+"""Learning-rate schedules (pure functions of the step counter)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def linear_warmup(step, warmup: int, peak: float):
+    s = jnp.asarray(step, jnp.float32)
+    return peak * jnp.minimum(1.0, (s + 1.0) / max(warmup, 1))
+
+
+def cosine_schedule(step, warmup: int, total: int, peak: float,
+                    floor: float = 0.1):
+    s = jnp.asarray(step, jnp.float32)
+    warm = peak * jnp.minimum(1.0, (s + 1.0) / max(warmup, 1))
+    frac = jnp.clip((s - warmup) / jnp.maximum(total - warmup, 1), 0.0, 1.0)
+    cos = floor + (1 - floor) * 0.5 * (1 + jnp.cos(jnp.pi * frac))
+    return jnp.where(s < warmup, warm, peak * cos)

@@ -1,0 +1,2 @@
+from .hlo import collective_bytes, parse_hlo_collectives
+from .model import RooflineResult, roofline_terms

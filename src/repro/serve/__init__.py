@@ -1,0 +1,2 @@
+from .engine import ServeConfig, ServeEngine, Request
+from .kv_cache import KVCacheManager

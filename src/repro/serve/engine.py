@@ -1,0 +1,223 @@
+"""Batched serving engine: bucketed prefill + continuous-batching decode.
+
+The runtime dispatcher half of the paper's §3.3.2 story: incoming prompts
+are rounded up to a shape bucket, the (plan, bucket) pair hits the
+compile cache (the CUDA-graph-capture analogue), and the scheduler's plan
+for that bucket is replayed.  Decode runs one static-shape step over the
+whole cache pool every iteration; requests claim/release rows (continuous
+batching).
+
+The engine is single-host/mesh-free here (tp=1); the launch layer wraps
+the same step functions in shard_map for the production mesh.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.compile_cache import CompileCache
+from ..core.scheduler import OpSchedulerBase, ScheduleContext
+from ..models.base import build_forward
+from .kv_cache import KVCacheManager
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray                 # (prompt_len,) int32
+    max_new_tokens: int = 16
+    eos_id: int = -1                   # -1: never stop early
+    # filled by the engine:
+    output: list = dataclasses.field(default_factory=list)
+    row: int = -1
+    submitted_s: float = 0.0
+    first_token_s: float = 0.0
+    done_s: float = 0.0
+
+
+@dataclasses.dataclass
+class ServeConfig:
+    max_batch: int = 8
+    s_max: int = 256
+    prefill_buckets: tuple = (32, 64, 128, 256)
+    greedy: bool = True
+
+
+class ServeEngine:
+    def __init__(self, model, params, scheduler: OpSchedulerBase,
+                 cfg: ServeConfig):
+        self.model = model
+        self.params = params
+        self.scheduler = scheduler
+        self.cfg = cfg
+        self.cache = KVCacheManager(model, cfg.max_batch, cfg.s_max)
+        self.compile_cache = CompileCache()
+        self.waiting: list[Request] = []
+        self.active: dict[int, Request] = {}     # row -> request
+        self.finished: list[Request] = []
+        self._decode_fn = None
+        self._stats = {"prefill_steps": 0, "decode_steps": 0,
+                       "decode_tokens": 0}
+        self._ck = self._cache_keys()
+
+    # -- public -----------------------------------------------------------
+    def submit(self, req: Request):
+        req.submitted_s = time.perf_counter()
+        self.waiting.append(req)
+
+    def run(self, max_iters: int = 10_000) -> list:
+        it = 0
+        while (self.waiting or self.active) and it < max_iters:
+            self._admit()
+            self._decode_step()
+            it += 1
+        return self.finished
+
+    @property
+    def stats(self):
+        return dict(self._stats)
+
+    # -- prefill ----------------------------------------------------------
+    def _bucket(self, n: int) -> int:
+        for b in self.cfg.prefill_buckets:
+            if n <= b:
+                return b
+        return self.cfg.prefill_buckets[-1]
+
+    def _prefill_fn(self, bucket: int) -> Callable:
+        def build():
+            segs, _ = self.model.build_segments("prefill", 1, bucket,
+                                                s_max=self.cfg.s_max)
+            info = ScheduleContext(local_batch=1, seq_len=bucket,
+                                   phase="prefill", arch=self.model.cfg.name)
+            fwd = build_forward(segs, self.scheduler, info)
+
+            def run(params, ids, positions):
+                return fwd(params, {"ids": ids, "positions": positions})
+
+            return jax.jit(run)
+
+        return self.compile_cache.get_or_build(("prefill", bucket), build)
+
+    def _admit(self):
+        while self.waiting and self.cache.free_rows:
+            req = self.waiting[0]
+            row = self.cache.allocate(req.rid)
+            if row is None:
+                break
+            self.waiting.pop(0)
+            req.row = row
+            n = len(req.prompt)
+            bucket = self._bucket(n)
+            ids = np.zeros((1, bucket), np.int32)
+            ids[0, :n] = req.prompt[:n]
+            pos = np.arange(bucket, dtype=np.int32)[None]
+            out = self._prefill_fn(bucket)(
+                self.params, jnp.asarray(ids), jnp.asarray(pos))
+            self._stats["prefill_steps"] += 1
+            stacks = {}
+            for pk, pv, dk, dv in self._ck:
+                stacks[dk] = out[pk][..., :n, :, :] if out[pk].ndim == 5 \
+                    else out[pk][:, :n]
+                stacks[dv] = out[pv][..., :n, :, :] if out[pv].ndim == 5 \
+                    else out[pv][:, :n]
+            tok = self._sample_from_prefill(out, n, bucket)
+            # bucket-padded prompts (n < bucket): the head's last-position
+            # logits are at padding, so the first decode step re-runs the
+            # final prompt token at position n-1 (cache holds [0, n-1))
+            # and produces the true first token — the -100 sentinel routes
+            # the engine down that path.
+            self.cache.write_prefill(row, stacks, n if tok >= 0 else n - 1)
+            req.output.append(int(tok))
+            req.first_token_s = time.perf_counter()
+            self.active[row] = req
+
+    def _sample_from_prefill(self, out, n, bucket):
+        if n != bucket:
+            return -100    # padded: first decode step recomputes position n-1
+        return int(np.argmax(np.asarray(out["logits"][0, -1])))
+
+    # -- decode -----------------------------------------------------------
+    def _decode(self) -> Callable:
+        if self._decode_fn is not None:
+            return self._decode_fn
+
+        def build():
+            segs, _ = self.model.build_segments(
+                "decode", self.cfg.max_batch, 1, s_max=self.cfg.s_max)
+            info = ScheduleContext(local_batch=self.cfg.max_batch,
+                                   seq_len=self.cfg.s_max, phase="decode",
+                                   arch=self.model.cfg.name)
+            fwd = build_forward(segs, self.scheduler, info)
+
+            def run(params, ids, positions, cache_len, caches):
+                batch = {"ids": ids, "positions": positions,
+                         "cache_len": cache_len, **caches}
+                out = fwd(params, batch)
+                new_caches = {k: out[k] for k in caches}
+                return out["logits"], new_caches
+
+            return jax.jit(run)
+
+        self._decode_fn = self.compile_cache.get_or_build(("decode",), build)
+        return self._decode_fn
+
+    def _decode_step(self):
+        if not self.active:
+            return
+        B = self.cfg.max_batch
+        ids = np.zeros((B, 1), np.int32)
+        for row, req in self.active.items():
+            last = req.output[-1] if req.output and req.output[-1] >= 0 \
+                else (req.prompt[-1] if len(req.prompt) else 0)
+            ids[row, 0] = last
+        clen = self.cache.cache_len_array()
+        pos = np.asarray(clen).reshape(B, 1).astype(np.int32)
+        logits, new_caches = self._decode()(
+            self.params, jnp.asarray(ids), jnp.asarray(pos), clen,
+            self.cache.caches)
+        self.cache.caches = new_caches
+        self._stats["decode_steps"] += 1
+        toks = np.asarray(jnp.argmax(logits, axis=-1)).reshape(B)
+        done_rows = []
+        for row, req in list(self.active.items()):
+            if req.output and req.output[0] == -100:
+                req.output[0] = int(toks[row])     # first real token
+            else:
+                req.output.append(int(toks[row]))
+            self.cache.lengths[row] += 1
+            self._stats["decode_tokens"] += 1
+            if (len(req.output) >= req.max_new_tokens
+                    or req.output[-1] == req.eos_id
+                    or self.cache.lengths[row] >= self.cfg.s_max - 1):
+                done_rows.append(row)
+        for row in done_rows:
+            req = self.active.pop(row)
+            req.done_s = time.perf_counter()
+            self.finished.append(req)
+            self.cache.release(row)
+
+    # -- cache key mapping --------------------------------------------------
+    def _cache_keys(self):
+        """[(prefill_k, prefill_v, decode_k_cache, decode_v_cache)] pairs."""
+        out = []
+        pstacks = self.model.layer_stacks("prefill")
+        dstacks = self.model.layer_stacks("decode")
+        for ps, ds in zip(pstacks, dstacks):
+            pname, _, pcount, _, psc_out = ps[:5]
+            if "k" not in psc_out:
+                continue
+            popts = ps[5] if len(ps) > 5 else {}
+            omap = popts.get("output_map", {})
+            dopts = ds[5] if len(ds) > 5 else {}
+            imap = dopts.get("input_map", {})
+            pk = omap.get("k", f"{pname}.k" if pcount > 1 else "k")
+            pv = omap.get("v", f"{pname}.v" if pcount > 1 else "v")
+            out.append((pk, pv, imap.get("k_cache", "k_cache"),
+                        imap.get("v_cache", "v_cache")))
+        return out

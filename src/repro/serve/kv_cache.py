@@ -1,0 +1,65 @@
+"""KV-cache slot manager for the batched serving engine.
+
+A fixed pool of ``max_batch`` rows per cache tensor (the model's
+``decode_cache_env`` layout).  Requests are assigned rows on admission and
+release them on completion — continuous batching over a static-shape
+decode step (the compiled executable never changes shape).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class KVCacheManager:
+    def __init__(self, model, max_batch: int, s_max: int):
+        self.max_batch = max_batch
+        self.s_max = s_max
+        self.caches = {k: jnp.zeros(v.shape, v.dtype)
+                       for k, v in model.decode_cache_env(
+                           max_batch, s_max).items()}
+        self.lengths = np.zeros((max_batch,), np.int32)
+        self.free_rows = list(range(max_batch))
+        self.row_owner: dict[int, int] = {}    # row -> request id
+
+    # -- slots ------------------------------------------------------------
+    def allocate(self, request_id: int) -> Optional[int]:
+        if not self.free_rows:
+            return None
+        row = self.free_rows.pop(0)
+        self.row_owner[row] = request_id
+        self.lengths[row] = 0
+        return row
+
+    def release(self, row: int):
+        self.row_owner.pop(row, None)
+        self.lengths[row] = 0
+        self.free_rows.append(row)
+        self.free_rows.sort()
+
+    @property
+    def active_rows(self) -> list:
+        return sorted(self.row_owner)
+
+    # -- data -------------------------------------------------------------
+    def write_prefill(self, row: int, stacks: dict, length: int):
+        """Write prefilled K/V ([L,]1,S,kv,hd) into the row's cache slots."""
+        for key, val in stacks.items():
+            cache = self.caches[key]
+            stacked = cache.ndim == val.ndim        # (L,B,S,...) vs (L,1,S,..)
+            S = val.shape[-3]
+            if stacked:
+                cache = jax.lax.dynamic_update_slice(
+                    cache, val.astype(cache.dtype),
+                    (0, row, 0, 0, 0))
+            else:
+                cache = jax.lax.dynamic_update_slice(
+                    cache, val[0].astype(cache.dtype), (row, 0, 0, 0))
+            self.caches[key] = cache
+        self.lengths[row] = length
+
+    def cache_len_array(self) -> jnp.ndarray:
+        return jnp.asarray(self.lengths)

@@ -1,0 +1,125 @@
+"""Paper Algorithm 1: static data-flow/memory analysis unit tests —
+ref-count death sites, prealloc flags, and the zero-copy merge contract
+(no ``concatenate`` on the merge path in the lowered HLO)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (FULL, OpSchedulerBase, ScheduleContext, Realizer,
+                        realize, record_plan, static_analysis, trace)
+from repro.core.analysis import BUF
+from repro.core.module import Module, Op, Param
+from repro.core.plan import OpHandle
+
+
+class Lin(Op):
+    def __init__(self, d_in, d_out, name):
+        super().__init__()
+        self.w = Param((d_in, d_out), jnp.float32)
+        self.named(name)
+
+    def kernel(self, p, x):
+        return x @ p["w"]
+
+
+class Chain(Module):
+    def __init__(self, d=8, n=3):
+        super().__init__()
+        for i in range(n):
+            setattr(self, f"l{i}", Lin(d, d, f"l{i}"))
+        self.n = n
+
+    def forward(self, x):
+        for i in range(self.n):
+            x = getattr(self, f"l{i}")(x)
+        return x
+
+
+class SplitThenMerge(OpSchedulerBase):
+    """l0 per-micro-batch, l1 merged, l2 merged — forces a prealloc
+    buffer between l0 (per-part) and l1 (FULL)."""
+
+    def schedule(self, ctx):
+        ctx.split([4, 4])
+        g = ctx.graph
+        oids = g.topo_order()
+        ctx.execute(OpHandle(oids[0], 0, "l0"))
+        ctx.execute(OpHandle(oids[0], 1, "l0"))
+        ctx.execute(tuple(OpHandle(oids[1], i, "l1") for i in (0, 1)))
+        ctx.execute(tuple(OpHandle(oids[2], i, "l2") for i in (0, 1)))
+
+
+def setup():
+    net = Chain()
+    g = trace(net, {"x": jax.ShapeDtypeStruct((8, 8), jnp.float32)})
+    params = net.init(jax.random.PRNGKey(0))
+    x = jax.random.normal(jax.random.PRNGKey(1), (8, 8))
+    return net, g, params, x
+
+
+def test_prealloc_flag_on_merge_point():
+    net, g, params, x = setup()
+    plan = record_plan(g, SplitThenMerge(), ScheduleContext(local_batch=8))
+    ana = static_analysis(g, plan)
+    l0_out = g.nodes[g.topo_order()[0]].outputs[0]
+    assert l0_out in ana.prealloc          # Alg.1 line 5
+    # only the merge-point tensor gets a buffer
+    assert len(ana.prealloc) == 1
+    assert ana.buffer_bytes == 8 * 8 * 4
+
+
+def test_death_sites_bound_liveness():
+    net, g, params, x = setup()
+    plan = record_plan(g, SplitThenMerge(), ScheduleContext(local_batch=8))
+    ana = static_analysis(g, plan)
+    oids = g.topo_order()
+    l0_out = g.nodes[oids[0]].outputs[0]
+    l1_out = g.nodes[oids[1]].outputs[0]
+    # the merge buffer dies when l1 consumes it (step index 2)
+    assert ana.death[(l0_out, BUF)] == 2
+    # l1's merged output dies at l2 (step 3)
+    assert ana.death[(l1_out, FULL)] == 3
+
+
+def test_ref_counts_match_consumption():
+    net, g, params, x = setup()
+    plan = record_plan(g, SplitThenMerge(), ScheduleContext(local_batch=8))
+    ana = static_analysis(g, plan)
+    l0_out = g.nodes[g.topo_order()[0]].outputs[0]
+    # consumed once, at FULL, via the assembled buffer
+    assert ana.ref_count((l0_out, FULL)) == 1
+
+
+def test_split_then_merge_correct():
+    net, g, params, x = setup()
+    want = net.apply(params, x)
+    plan = record_plan(g, SplitThenMerge(), ScheduleContext(local_batch=8))
+    got = realize(g, plan, params, {"x": x})["out"]
+    np.testing.assert_allclose(got, want, atol=1e-5)
+
+
+def test_zero_copy_merge_no_concatenate_in_hlo():
+    """The merge path must lower to dynamic-update-slice writes into the
+    preallocated buffer — never a concatenate (the paper's zero-copy
+    resharding claim, checked on the actual HLO)."""
+    net, g, params, x = setup()
+    plan = record_plan(g, SplitThenMerge(), ScheduleContext(local_batch=8))
+    rz = Realizer(g, plan)
+
+    def f(params, x):
+        return rz(params, {"x": x})["out"]
+
+    hlo = jax.jit(f).lower(params, x).as_text()
+    assert "concatenate" not in hlo
+    assert "dynamic-update-slice" in hlo or "dynamic_update_slice" in hlo
+
+
+def test_gc_drops_env_references():
+    """After realize, the env must not retain dead intermediates: we
+    check the death table covers every produced tensor."""
+    net, g, params, x = setup()
+    plan = record_plan(g, SplitThenMerge(), ScheduleContext(local_batch=8))
+    ana = static_analysis(g, plan)
+    produced = {(t, p) for ws in ana.writes for (t, p) in ws}
+    for key in produced:
+        assert key in ana.death or key[0] in ana.prealloc

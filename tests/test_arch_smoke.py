@@ -1,0 +1,173 @@
+"""Per-architecture smoke tests (assignment requirement): reduced
+same-family config, one forward/train step on CPU, output shapes + no
+NaNs — for all 10 assigned architectures × {train, prefill, decode}."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import make_batch
+from repro.configs import get_config, get_smoke_config, list_archs
+from repro.core.scheduler import OpSchedulerBase, ScheduleContext
+from repro.models.base import build_forward
+from repro.models.layers import MeshInfo
+from repro.models.registry import build_model
+
+ARCHS = list_archs()
+B, S, S_MAX = 2, 16, 32
+
+
+def test_all_ten_archs_registered():
+    assert len(ARCHS) == 10
+    assert set(ARCHS) == {
+        "chatglm3-6b", "deepseek-coder-33b", "smollm-135m", "minitron-8b",
+        "deepseek-moe-16b", "grok-1-314b", "mamba2-2.7b", "whisper-tiny",
+        "qwen2-vl-7b", "zamba2-1.2b"}
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_exact_config_matches_assignment(arch):
+    cfg = get_config(arch)
+    expect = {
+        "chatglm3-6b": (28, 4096, 32, 2, 13696, 65024),
+        "deepseek-coder-33b": (62, 7168, 56, 8, 19200, 32256),
+        "smollm-135m": (30, 576, 9, 3, 1536, 49152),
+        "minitron-8b": (32, 4096, 32, 8, 16384, 256000),
+        "deepseek-moe-16b": (28, 2048, 16, 16, 1408, 102400),
+        "grok-1-314b": (64, 6144, 48, 8, 32768, 131072),
+        "mamba2-2.7b": (64, 2560, 0, 0, 0, 50280),
+        "whisper-tiny": (4, 384, 6, 6, 1536, 51865),
+        "qwen2-vl-7b": (28, 3584, 28, 4, 18944, 152064),
+        "zamba2-1.2b": (38, 2048, 32, 32, 8192, 32000),
+    }[arch]
+    dff = (cfg.moe.d_ff_expert if cfg.family == "moe" and arch ==
+           "deepseek-moe-16b" else cfg.d_ff)
+    assert (cfg.n_layers, cfg.d_model, cfg.n_heads, cfg.n_kv, dff,
+            cfg.vocab) == expect
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_param_count_plausible(arch):
+    cfg = get_config(arch)
+    total, active = cfg.param_count()
+    expect = {"chatglm3-6b": 6e9, "deepseek-coder-33b": 33e9,
+              "smollm-135m": 135e6, "minitron-8b": 8e9,
+              "deepseek-moe-16b": 16e9, "grok-1-314b": 314e9,
+              "mamba2-2.7b": 2.7e9, "whisper-tiny": 37e6,
+              "qwen2-vl-7b": 7e9, "zamba2-1.2b": 1.2e9}[arch]
+    assert 0.55 * expect < total < 1.45 * expect, (total, expect)
+    assert active <= total
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_train_step_smoke(arch):
+    cfg = get_smoke_config(arch)
+    model = build_model(cfg, MeshInfo(tp=1, dp=1))
+    segs, binputs = model.build_segments("train", B, S)
+    params = model._init_from_segments(segs, jax.random.PRNGKey(0))
+    fwd = build_forward(segs, OpSchedulerBase(),
+                        ScheduleContext(local_batch=B, seq_len=S,
+                                        phase="train", arch=arch))
+    out = fwd(params, make_batch(binputs))
+    assert out["loss_sum"].shape == (B,)
+    assert out["token_count"].shape == (B,)
+    loss = float(jnp.sum(out["loss_sum"]) / jnp.sum(out["token_count"]))
+    assert np.isfinite(loss) and 0.0 < loss < 20.0
+    # gradient step sanity: loss decreases on repeated identical batch
+    from repro.train import TrainStepConfig, build_train_step
+    from repro.optim import AdamWConfig
+    step, segs2, binputs2, init_opt = build_train_step(
+        model, OpSchedulerBase(), B, S,
+        TrainStepConfig(optimizer=AdamWConfig(lr=2e-3), remat=False,
+                        warmup=1, total_steps=10))
+    p2 = model._init_from_segments(segs2, jax.random.PRNGKey(0))
+    opt = init_opt(p2)
+    batch = make_batch(binputs2)
+    js = jax.jit(step)
+    losses = []
+    for i in range(3):
+        p2, opt, m = js(p2, opt, batch, jnp.int32(i))
+        losses.append(float(m["loss"]))
+    assert losses[-1] < losses[0], losses
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_prefill_and_decode_smoke(arch):
+    cfg = get_smoke_config(arch)
+    model = build_model(cfg, MeshInfo(tp=1, dp=1))
+    for phase in ("prefill", "decode"):
+        segs, binputs = model.build_segments(phase, B, S, s_max=S_MAX)
+        params = model._init_from_segments(segs, jax.random.PRNGKey(0))
+        fwd = build_forward(segs, OpSchedulerBase(),
+                            ScheduleContext(local_batch=B, seq_len=S,
+                                            phase=phase, arch=arch))
+        batch = make_batch(binputs)
+        if phase == "decode":
+            for k, sds in model.decode_cache_env(B, S_MAX).items():
+                batch[k] = jnp.zeros(sds.shape, sds.dtype)
+        out = fwd(params, batch)
+        logits = out["logits"]
+        assert logits.shape[0] == B and logits.shape[1] == 1
+        assert not bool(jnp.any(jnp.isnan(logits.astype(jnp.float32))))
+
+
+@pytest.mark.parametrize("arch", ["chatglm3-6b", "mamba2-2.7b",
+                                  "zamba2-1.2b", "deepseek-moe-16b"])
+def test_prefill_decode_consistency(arch):
+    """Greedy decode after prefill must equal a longer prefill's argmax
+    (cache correctness end-to-end)."""
+    cfg = get_smoke_config(arch)
+    if cfg.family in ("ssm", "hybrid"):
+        pytest.skip("prefill->decode state handoff is a serve-layer "
+                    "feature for attention archs; SSM handoff is "
+                    "documented future work")
+    model = build_model(cfg, MeshInfo(tp=1, dp=1))
+    n = 8
+    ids = jax.random.randint(jax.random.PRNGKey(3), (1, n + 1), 0, 100)
+
+    def prefill_logits(length):
+        segs, binputs = model.build_segments("prefill", 1, length,
+                                             s_max=S_MAX)
+        params = model._init_from_segments(segs, jax.random.PRNGKey(0))
+        fwd = build_forward(segs, OpSchedulerBase(),
+                            ScheduleContext(local_batch=1, seq_len=length,
+                                            phase="prefill", arch=arch))
+        batch = {"ids": ids[:, :length],
+                 "positions": jnp.arange(length, dtype=jnp.int32)[None]}
+        return fwd(params, batch)
+
+    out_n1 = prefill_logits(n + 1)
+    want = int(jnp.argmax(out_n1["logits"][0, -1]))
+
+    # prefill n tokens, write cache, decode token n
+    out_n = prefill_logits(n)
+    segs, binputs = model.build_segments("decode", 1, 1, s_max=S_MAX)
+    params = model._init_from_segments(segs, jax.random.PRNGKey(0))
+    fwd = build_forward(segs, OpSchedulerBase(),
+                        ScheduleContext(local_batch=1, seq_len=1,
+                                        phase="decode", arch=arch))
+    batch = {"ids": ids[:, n:n + 1],
+             "positions": jnp.full((1, 1), n, jnp.int32),
+             "cache_len": jnp.full((1,), n, jnp.int32)}
+    for k, sds in model.decode_cache_env(1, S_MAX).items():
+        cache = jnp.zeros(sds.shape, sds.dtype)
+        if k in ("k_cache", "v_cache"):
+            kk = "k" if k.startswith("k") else "v"
+            src = out_n.get(f"layers.{kk}", out_n.get(kk))
+            if cache.ndim == 5:    # stacked (L, B, S, kv, hd)
+                if src.ndim == 4:
+                    src = src[None]
+                cache = cache.at[:, :, :n].set(src.astype(cache.dtype))
+            else:                  # count-1 stack (B, S, kv, hd)
+                if src.ndim == 5:
+                    src = src[0]
+                cache = cache.at[:, :n].set(src.astype(cache.dtype))
+        batch[k] = cache
+    if "dense0_k_cache" in batch:
+        batch["dense0_k_cache"] = batch["dense0_k_cache"].at[:, :n].set(
+            out_n["dense0.k"].astype(batch["dense0_k_cache"].dtype))
+        batch["dense0_v_cache"] = batch["dense0_v_cache"].at[:, :n].set(
+            out_n["dense0.v"].astype(batch["dense0_v_cache"].dtype))
+    out_d = fwd(params, batch)
+    got = int(jnp.argmax(out_d["logits"][0, -1]))
+    assert got == want

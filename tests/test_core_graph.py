@@ -1,0 +1,115 @@
+"""Unit tests: OpGraph IR, tracing, partition rules (paper Fig. 5)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (FULL, Mark, OpGraph, SplitEveryOp, SplitFunc,
+                        SplitModule, partition, sequential_plan, trace)
+from repro.core.module import FnOp, Module, Op, Param, mark
+
+
+class Lin(Op):
+    def __init__(self, d_in, d_out, name):
+        super().__init__()
+        self.w = Param((d_in, d_out), jnp.float32)
+        self.named(name)
+
+    def kernel(self, p, x):
+        return x @ p["w"]
+
+
+class Block(Module):
+    def __init__(self, d, name="block"):
+        super().__init__()
+        self.a = Lin(d, d, "a")
+        self.b = Lin(d, d, "b")
+        self.named(name)
+
+    def forward(self, x):
+        return self.b(self.a(x))
+
+
+class Net(Module):
+    def __init__(self, d=8):
+        super().__init__()
+        self.blk1 = Block(d).named("blk1")
+        self.blk2 = Block(d).named("blk2")
+        self.head = Lin(d, 4, "head")
+
+    def forward(self, x):
+        h = self.blk1(x)
+        with mark("mid"):
+            h = self.blk2(h)
+        return self.head(h)
+
+
+@pytest.fixture
+def net_and_graph():
+    net = Net()
+    g = trace(net, {"x": jax.ShapeDtypeStruct((4, 8), jnp.float32)})
+    return net, g
+
+
+def test_trace_records_all_ops(net_and_graph):
+    _, g = net_and_graph
+    assert len(g.nodes) == 5
+    names = [n.name for n in g.nodes.values()]
+    assert any("blk1/a" in n for n in names)
+    assert any("#mid" in n for n in names)
+
+
+def test_graph_validates(net_and_graph):
+    _, g = net_and_graph
+    g.validate()
+    assert g.topo_order() == sorted(g.nodes)
+
+
+def test_trace_vs_direct_equivalence(net_and_graph):
+    net, g = net_and_graph
+    params = net.init(jax.random.PRNGKey(0))
+    x = jax.random.normal(jax.random.PRNGKey(1), (4, 8))
+    from repro.core import realize
+    out = realize(g, sequential_plan(g), params, {"x": x})
+    np.testing.assert_allclose(out["out"], net.apply(params, x), atol=1e-5)
+
+
+def test_partition_split_module(net_and_graph):
+    _, g = net_and_graph
+    coarse = partition(g, [SplitModule(Block)])
+    # blk1 (2 ops) and blk2 (2 ops) each coalesce; head stays alone
+    assert len(coarse.nodes) == 3
+
+
+def test_partition_split_func(net_and_graph):
+    _, g = net_and_graph
+    coarse = partition(g, [SplitFunc(r"head")], default_depth=1)
+    names = [n.name for n in coarse.nodes.values()]
+    assert any("head" in n for n in names)
+
+
+def test_partition_mark(net_and_graph):
+    _, g = net_and_graph
+    coarse = partition(g, [Mark("mid")], default_depth=1)
+    # the marked region is one unit
+    marked = [n for n in coarse.nodes.values() if "#mid" in n.name]
+    assert len(marked) == 1
+    assert len(marked[0].members) == 2
+
+
+def test_partition_preserves_semantics(net_and_graph):
+    net, g = net_and_graph
+    params = net.init(jax.random.PRNGKey(0))
+    x = jax.random.normal(jax.random.PRNGKey(1), (4, 8))
+    from repro.core import realize
+    want = net.apply(params, x)
+    for rules in ([SplitModule(Block)], [Mark("mid")], [SplitEveryOp()]):
+        coarse = partition(g, rules)
+        out = realize(coarse, sequential_plan(coarse), params, {"x": x})
+        np.testing.assert_allclose(out["out"], want, atol=1e-5)
+
+
+def test_fnop_wraps_pure_fn():
+    f = FnOp(lambda x: x * 2, "double", resource="memory")
+    g = trace(f, {"x": jax.ShapeDtypeStruct((3,), jnp.float32)})
+    assert list(g.nodes.values())[0].resource == "memory"

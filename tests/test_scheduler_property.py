@@ -1,0 +1,165 @@
+"""Property-based tests (hypothesis): the transparency contract.
+
+ANY valid schedule — random topo order, random micro-batch split, random
+merge points — must produce outputs allclose to sequential execution.
+This is the invariant that makes the paper's decoupling safe.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (FULL, OpSchedulerBase, ScheduleContext, partition,
+                        realize, record_plan, sequential_plan, trace)
+from repro.core.module import Module, Op, Param
+from repro.core.plan import OpHandle
+
+
+class Lin(Op):
+    def __init__(self, d_in, d_out, name):
+        super().__init__()
+        self.w = Param((d_in, d_out), jnp.float32)
+        self.named(name)
+
+    def kernel(self, p, x):
+        return jnp.tanh(x @ p["w"])
+
+
+class Diamond(Module):
+    """Non-trivial DAG: two parallel branches re-merging."""
+
+    def __init__(self, d=8):
+        super().__init__()
+        self.stem = Lin(d, d, "stem")
+        self.left = Lin(d, d, "left")
+        self.right = Lin(d, d, "right")
+        self.out = Lin(2 * d, 4, "out")
+
+    def forward(self, x):
+        h = self.stem(x)
+        l, r = self.left(h), self.right(h)
+        return self.out(jnp.concatenate([l, r], -1))
+
+
+class CatOp(Op):
+    def kernel(self, p, a, b):
+        return jnp.concatenate([a, b], -1)
+
+
+class DiamondExplicit(Module):
+    """Same DAG with the concat as a schedulable op (trace-friendly)."""
+
+    def __init__(self, d=8):
+        super().__init__()
+        self.stem = Lin(d, d, "stem")
+        self.left = Lin(d, d, "left")
+        self.right = Lin(d, d, "right")
+        self.cat = CatOp().named("cat")
+        self.out = Lin(2 * d, 4, "out")
+
+    def forward(self, x):
+        h = self.stem(x)
+        return self.out(self.cat(self.left(h), self.right(h)))
+
+
+@pytest.fixture(scope="module")
+def setup():
+    net = DiamondExplicit()
+    g = trace(net, {"x": jax.ShapeDtypeStruct((8, 8), jnp.float32)})
+    params = net.init(jax.random.PRNGKey(0))
+    x = jax.random.normal(jax.random.PRNGKey(1), (8, 8))
+    want = realize(g, sequential_plan(g), params, {"x": x})["out"]
+    return g, params, x, want
+
+
+class RandomScheduler(OpSchedulerBase):
+    """Random valid schedule driven by a hypothesis-provided seed."""
+
+    def __init__(self, seed, split_sizes, merge_prob):
+        self.rng = np.random.default_rng(seed)
+        self.split_sizes = split_sizes
+        self.merge_prob = merge_prob
+
+    def schedule(self, ctx):
+        if self.split_sizes:
+            ctx.split(self.split_sizes)
+        parts = (list(range(len(self.split_sizes)))
+                 if self.split_sizes else [FULL])
+        while True:
+            ready = [h for i in parts for h in ctx.get_ready_ops(i)]
+            if not ready:
+                break
+            # maybe merge all micro-batch instances of one ready op
+            if (self.split_sizes and self.rng.random() < self.merge_prob):
+                by_oid = {}
+                for h in ready:
+                    by_oid.setdefault(h.oid, []).append(h)
+                full = [v for v in by_oid.values()
+                        if len(v) == len(self.split_sizes)]
+                if full:
+                    ctx.execute(tuple(self.rng.choice(len(full))
+                                      is not None and full[
+                                          self.rng.integers(len(full))]))
+                    continue
+            ctx.execute(ready[self.rng.integers(len(ready))])
+
+
+@settings(max_examples=30, deadline=None)
+@given(seed=st.integers(0, 10_000),
+       split=st.sampled_from([(), (4, 4), (2, 6), (3, 5), (2, 2, 4)]),
+       merge_prob=st.floats(0.0, 0.9))
+def test_random_schedules_match_sequential(setup, seed, split, merge_prob):
+    g, params, x, want = setup
+    sched = RandomScheduler(seed, split, merge_prob)
+    plan = record_plan(g, sched, ScheduleContext(local_batch=8))
+    got = realize(g, plan, params, {"x": x})["out"]
+    np.testing.assert_allclose(got, want, atol=1e-5)
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 10_000))
+def test_random_schedules_on_partitioned_graph(setup, seed):
+    g, params, x, want = setup
+    from repro.core import SplitEveryOp
+    coarse = partition(g, [SplitEveryOp()])
+    sched = RandomScheduler(seed, (4, 4), 0.4)
+    plan = record_plan(coarse, sched, ScheduleContext(local_batch=8))
+    got = realize(coarse, plan, params, {"x": x})["out"]
+    np.testing.assert_allclose(got, want, atol=1e-5)
+
+
+def test_dependency_violation_rejected(setup):
+    g, params, x, want = setup
+
+    class BadScheduler(OpSchedulerBase):
+        def schedule(self, ctx):
+            last = max(ctx.graph.nodes)
+            ctx.execute(OpHandle(last, FULL, "out"))
+
+    with pytest.raises(RuntimeError, match="dependency violation"):
+        record_plan(g, BadScheduler(), ScheduleContext(local_batch=8))
+
+
+def test_incomplete_schedule_rejected(setup):
+    g, params, x, want = setup
+
+    class LazyScheduler(OpSchedulerBase):
+        def schedule(self, ctx):
+            ctx.execute(ctx.get_ready_ops()[0])
+
+    with pytest.raises(RuntimeError, match="incomplete"):
+        record_plan(g, LazyScheduler(), ScheduleContext(local_batch=8))
+
+
+def test_double_execution_rejected(setup):
+    g, params, x, want = setup
+
+    class DoubleScheduler(OpSchedulerBase):
+        def schedule(self, ctx):
+            h = ctx.get_ready_ops()[0]
+            ctx.execute(h)
+            ctx.execute(h)
+
+    with pytest.raises(RuntimeError, match="already executed"):
+        record_plan(g, DoubleScheduler(), ScheduleContext(local_batch=8))

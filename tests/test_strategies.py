@@ -1,0 +1,155 @@
+"""Strategy tests: every paper strategy × every arch family must be
+numerically transparent, and each strategy's structural signature
+(split/merge/fusion/overlap order) must actually appear in its plan."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import make_batch
+from repro.configs import get_smoke_config
+from repro.core import partition, record_plan
+from repro.core.scheduler import ScheduleContext
+from repro.core.strategies import STRATEGIES, get_strategy, tokens_of
+from repro.models.base import build_forward
+from repro.models.layers import MeshInfo
+from repro.models.registry import build_model
+
+B, S = 4, 16
+STRATS = ["sequential", "nanoflow", "dbo", "sbo", "tokenweave", "comet",
+          "flux", "dynamic"]
+FAMS = ["chatglm3-6b", "deepseek-moe-16b", "mamba2-2.7b", "zamba2-1.2b",
+        "whisper-tiny", "qwen2-vl-7b"]
+
+
+def loss_of(arch, strat_name, **kw):
+    cfg = get_smoke_config(arch)
+    model = build_model(cfg, MeshInfo(tp=1, dp=1))
+    segs, binputs = model.build_segments("train", B, S)
+    params = model._init_from_segments(segs, jax.random.PRNGKey(0))
+    strat = get_strategy(strat_name, **kw)
+    fwd = build_forward(segs, strat,
+                        ScheduleContext(local_batch=B, seq_len=S,
+                                        phase="train", arch=arch))
+    out = fwd(params, make_batch(binputs))
+    return float(jnp.sum(out["loss_sum"]) / jnp.sum(out["token_count"]))
+
+
+@pytest.mark.parametrize("arch", FAMS)
+@pytest.mark.parametrize("strat", STRATS)
+def test_strategy_transparency(arch, strat):
+    kw = {"min_tokens": 1} if strat in ("nanoflow", "dbo") else {}
+    base = loss_of(arch, "sequential")
+    got = loss_of(arch, strat, **kw)
+    assert abs(got - base) / max(abs(base), 1e-9) < 2e-2, (got, base)
+
+
+def plan_for(arch, strat_name, **kw):
+    cfg = get_smoke_config(arch)
+    model = build_model(cfg, MeshInfo(tp=1, dp=1))
+    segs, _ = model.build_segments("train", B, S)
+    strat = get_strategy(strat_name, **kw)
+    seg = [x for x in segs if "layer" in x.name][-1]
+    g = seg.graph
+    if strat.partition_rules():
+        g = partition(g, strat.partition_rules(), default_depth=2)
+    return record_plan(g, strat, ScheduleContext(
+        local_batch=B, seq_len=S, phase="train", arch=arch)), g
+
+
+def test_nanoflow_splits():
+    plan, _ = plan_for("chatglm3-6b", "nanoflow", min_tokens=1)
+    assert plan.split_sizes == (2, 2)
+
+
+def test_nanoflow_threshold_falls_back():
+    plan, _ = plan_for("chatglm3-6b", "nanoflow", min_tokens=10 ** 9)
+    assert plan.split_sizes == ()          # paper Fig. 2a: no small-batch split
+
+
+def test_dbo_merges_attention_splits_moe():
+    plan, g = plan_for("deepseek-moe-16b", "dbo", min_tokens=1)
+    assert plan.split_sizes == (2, 2)
+    kinds = {}
+    for st in plan.steps:
+        name = g.nodes[st.handles[0].oid].name
+        kinds.setdefault(st.kind, []).append(name)
+    assert any("attention" in n for n in kinds.get("merged", []))
+    assert any("moe" in n for n in kinds.get("exec", []))
+    # canonical interleave: a dispatch of one mb precedes the other mb's
+    # expert GEMM (the overlap window)
+    order = [(st.kind, g.nodes[st.handles[0].oid].name, st.handles[0].mb)
+             for st in plan.steps]
+    disp = [i for i, (k, n, m) in enumerate(order) if "dispatch" in n]
+    ffn = [i for i, (k, n, m) in enumerate(order) if "expert_ffn" in n]
+    assert disp and ffn and disp[1] < ffn[-1]
+
+
+def test_sbo_reorders_independent_compute_behind_network():
+    plan, g = plan_for("deepseek-moe-16b", "sbo")
+    names = [g.nodes[st.handles[0].oid].name for st in plan.steps]
+    res = [g.nodes[st.handles[0].oid].resource for st in plan.steps]
+    # at least one network op is directly followed by a non-dependent
+    # compute/memory op
+    ok = any(res[i] == "network" and res[i + 1] != "network"
+             and not (set(g.nodes[plan.steps[i].handles[0].oid].outputs)
+                      & set(g.nodes[plan.steps[i + 1].handles[0].oid].inputs))
+             for i in range(len(res) - 1))
+    assert ok
+
+
+def test_tokenweave_fuses_ar_add_norm():
+    # smollm is non-SP dense: its layer graph has the ar->add->norm triple
+    # (mamba's single ar sits at the layer-graph boundary — no target,
+    # per DESIGN.md §Arch-applicability)
+    plan, _ = plan_for("smollm-135m", "tokenweave")
+    fused = [st for st in plan.steps if st.kind == "fused"]
+    assert fused and all(st.replace_name == "tokenweave" for st in fused)
+    assert all(len(st.handles) == 3 for st in fused)
+
+
+def test_comet_fuses_dispatch_gemm_combine():
+    plan, _ = plan_for("deepseek-moe-16b", "comet")
+    fused = [st for st in plan.steps if st.kind == "fused"]
+    assert len(fused) == 1 and fused[0].replace_name == "comet"
+
+
+def test_flux_fuses_linear_allreduce():
+    plan, _ = plan_for("smollm-135m", "flux")
+    fused = [st for st in plan.steps if st.kind == "fused"]
+    assert len(fused) >= 1 and fused[0].replace_name == "flux"
+
+
+def test_dynamic_picks_by_context():
+    dyn = get_strategy("dynamic", split_tokens=64, seq_tokens=8)
+    cfg = get_smoke_config("deepseek-moe-16b")
+    model = build_model(cfg, MeshInfo(tp=1, dp=1))
+    segs, _ = model.build_segments("train", B, S)
+    seg = [x for x in segs if "layer" in x.name][-1]
+    g = partition(seg.graph, dyn.partition_rules(), default_depth=2)
+
+    from repro.core.scheduler import SchedCtx
+    big = SchedCtx(g, ScheduleContext(local_batch=8, seq_len=512,
+                                      phase="train"))
+    assert dyn.pick(big).name == "dbo"
+    small = SchedCtx(g, ScheduleContext(local_batch=1, seq_len=16,
+                                        phase="decode"))
+    assert dyn.pick(small).name == "sequential"
+    mid = SchedCtx(g, ScheduleContext(local_batch=32, seq_len=1,
+                                      phase="decode"))
+    assert dyn.pick(mid).name == "sbo"
+
+
+def test_loc_budget_matches_paper_table2():
+    """Table 2 analogue: each strategy implementation stays within the
+    same order of engineering cost the paper reports (~10-70 LoC)."""
+    import inspect
+    from repro.core.strategies import (comet, dbo, flux, nanoflow, sbo,
+                                       tokenweave)
+    for mod, cls in ((nanoflow, "NanoFlow"), (dbo, "DualBatchOverlap"),
+                     (sbo, "SingleBatchOverlap"), (tokenweave, "TokenWeave"),
+                     (comet, "Comet"), (flux, "Flux")):
+        src = inspect.getsource(getattr(mod, cls))
+        loc = len([l for l in src.splitlines()
+                   if l.strip() and not l.strip().startswith(("#", '"'))])
+        assert loc <= 80, (cls, loc)
