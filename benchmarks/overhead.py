@@ -2,10 +2,16 @@
 
 GPU DynaFlow measures CPU launch time per forward; the JAX analogue
 decomposes the dispatch path into (a) plan construction (the Python
-scheduler), (b) static analysis (Alg. 1), (c) trace+realize build,
-(d) compile-cache-hit dispatch — the cost a serving iteration actually
-pays, mirroring CUDA-graph replay.  Also reproduces the fallback point:
-sequential-mode planning is cheaper than dynamic planning.
+scheduler), (b) static analysis (Alg. 1), (c) plan lowering to the
+slot-based instruction stream, (d) trace+realize build — interpreted
+vs lowered-with-replay, the cost every re-jit pays — and (e) compile-
+cache-hit dispatch, mirroring CUDA-graph replay.  Also reproduces the
+fallback point: sequential-mode planning is cheaper than dynamic.
+
+Key rows:
+  overhead/build_interpreted   analysis + interpreter build + full trace
+  overhead/build_lowered       warm plan-cache hit + capture replay trace
+  overhead/build_speedup       the paper's capture-vs-interpret claim
 """
 import time
 
@@ -24,7 +30,9 @@ def _time(fn, n=20, warmup=2):
 
 def run():
     from repro.configs import get_smoke_config
-    from repro.core import Realizer, partition, record_plan, static_analysis
+    from repro.core import (Realizer, lower, partition, record_plan,
+                            static_analysis)
+    from repro.core.compile_cache import LoweredPlanCache
     from repro.core.scheduler import ScheduleContext
     from repro.core.strategies import get_strategy
     from repro.models.layers import MeshInfo
@@ -49,8 +57,53 @@ def run():
         t_plan = _time(lambda: record_plan(g, strat, info))
         plan = record_plan(g, strat, info)
         t_ana = _time(lambda: static_analysis(g, plan))
+        t_low = _time(lambda: lower(g, plan))
         out.append(f"overhead/plan_{name},{t_plan:.1f},us")
         out.append(f"overhead/analysis_{name},{t_ana:.1f},us")
+        out.append(f"overhead/lower_{name},{t_low:.1f},us")
+
+    # -- interpreted vs lowered trace+realize build ------------------------
+    # the cost of going from (graph, plan) to a traced computation, i.e.
+    # what every fresh jit of a bucket pays per segment
+    g = seg.graph
+    plan = record_plan(g, get_strategy("sequential"), info)
+    lay_params = seg.module.init(jax.random.PRNGKey(0))
+    seg_inputs = {k: jnp.zeros(g.tensors[t].shape, g.tensors[t].dtype)
+                  for k, t in g.inputs.items()}
+    plan_cache = LoweredPlanCache()
+    plan_cache.get_or_lower(g, plan)                     # warm, as in serving
+
+    def build_interpreted():
+        rz = Realizer(g, plan, lowered=False)            # runs Alg. 1 anew
+        jax.make_jaxpr(lambda p, i: rz(p, i))(lay_params, seg_inputs)
+
+    def build_lowered():
+        rz = Realizer(g, plan, plan_cache=plan_cache)    # fingerprint hit
+        jax.make_jaxpr(lambda p, i: rz(p, i))(lay_params, seg_inputs)
+
+    build_lowered()                                      # capture once
+    t_int = _time(build_interpreted, n=10)
+    t_lowd = _time(build_lowered, n=10)
+    out.append(f"overhead/build_interpreted,{t_int:.1f},us")
+    out.append(f"overhead/build_lowered,{t_lowd:.1f},us")
+    out.append(f"overhead/build_speedup,{t_int / max(t_lowd, 1e-9):.1f},x")
+
+    # plan-to-dispatch latency: scheduler run included (cold plan, warm
+    # lowering/capture — the serving steady state for a known bucket)
+    def p2d_interpreted():
+        p = record_plan(g, get_strategy("sequential"), info)
+        rz = Realizer(g, p, lowered=False)
+        jax.make_jaxpr(lambda pp, i: rz(pp, i))(lay_params, seg_inputs)
+
+    def p2d_lowered():
+        p = record_plan(g, get_strategy("sequential"), info)
+        rz = Realizer(g, p, plan_cache=plan_cache)
+        jax.make_jaxpr(lambda pp, i: rz(pp, i))(lay_params, seg_inputs)
+
+    t_pi = _time(p2d_interpreted, n=10)
+    t_pl = _time(p2d_lowered, n=10)
+    out.append(f"overhead/plan_to_dispatch_interpreted,{t_pi:.1f},us")
+    out.append(f"overhead/plan_to_dispatch_lowered,{t_pl:.1f},us")
 
     # compiled dispatch: cache hit vs miss (CUDA-graph replay analogue)
     from repro.core.compile_cache import CompileCache

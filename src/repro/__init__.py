@@ -1,0 +1,4 @@
+"""DynaFlow reproduction — programmable operator scheduling on JAX."""
+from ._compat import install_jax_shims
+
+install_jax_shims()

@@ -1,0 +1,52 @@
+"""Environment shims — run the codebase on the baked-in toolchain.
+
+The source tree targets the current JAX API surface; the container pins
+jax 0.4.x.  ``install_jax_shims`` backfills the few moved/renamed entry
+points we use (``jax.shard_map``, ``jax.sharding.AxisType``,
+``jax.make_mesh(axis_types=...)``) from their older locations.  All shims
+are no-ops on a new-enough JAX.
+"""
+from __future__ import annotations
+
+import enum
+import inspect
+
+
+def install_jax_shims():
+    import jax
+    import jax.sharding as sharding
+
+    if not hasattr(sharding, "AxisType"):
+        class AxisType(enum.Enum):
+            Auto = "auto"
+            Explicit = "explicit"
+            Manual = "manual"
+
+        sharding.AxisType = AxisType
+
+    if "axis_types" not in inspect.signature(jax.make_mesh).parameters:
+        _make_mesh = jax.make_mesh
+
+        def make_mesh(axis_shapes, axis_names, *, axis_types=None,
+                      devices=None):
+            return _make_mesh(axis_shapes, axis_names, devices=devices)
+
+        jax.make_mesh = make_mesh
+
+    if not hasattr(jax, "shard_map"):
+        from jax.experimental.shard_map import shard_map as _shard_map
+        _params = inspect.signature(_shard_map).parameters
+
+        def shard_map(f=None, *, mesh, in_specs, out_specs, check_vma=None,
+                      **kw):
+            # new API spells replication checking `check_vma`; old `check_rep`
+            if check_vma is not None and "check_rep" in _params:
+                kw.setdefault("check_rep", check_vma)
+
+            def bind(g):
+                return _shard_map(g, mesh=mesh, in_specs=in_specs,
+                                  out_specs=out_specs, **kw)
+
+            return bind if f is None else bind(f)
+
+        jax.shard_map = shard_map

@@ -1,0 +1,78 @@
+"""Minimal drop-in for the ``hypothesis`` API surface the tests use.
+
+Installed by ``tests/conftest.py`` ONLY when the real package is absent
+(the container doesn't ship it).  Examples are drawn from a deterministic
+per-test RNG, so runs are reproducible; this trades hypothesis' shrinking
+and adaptive search for zero dependencies — acceptable for CI smoke.
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+import zlib
+
+import numpy as np
+
+
+class _Strategy:
+    def __init__(self, draw):
+        self._draw = draw
+
+    def example_for(self, rng):
+        return self._draw(rng)
+
+
+class strategies:
+    @staticmethod
+    def integers(min_value=0, max_value=2 ** 31 - 1):
+        return _Strategy(
+            lambda rng: int(rng.integers(min_value, max_value + 1)))
+
+    @staticmethod
+    def floats(min_value=0.0, max_value=1.0, **_):
+        return _Strategy(lambda rng: float(rng.uniform(min_value, max_value)))
+
+    @staticmethod
+    def sampled_from(options):
+        opts = list(options)
+        return _Strategy(lambda rng: opts[int(rng.integers(len(opts)))])
+
+    @staticmethod
+    def booleans():
+        return _Strategy(lambda rng: bool(rng.integers(2)))
+
+
+def settings(max_examples=10, deadline=None, **_):
+    def deco(fn):
+        fn._stub_max_examples = max_examples
+        return fn
+
+    return deco
+
+
+def given(*arg_strats, **kw_strats):
+    def deco(fn):
+        sig = inspect.signature(fn)
+        names = list(sig.parameters)
+        # positional strategies fill the trailing non-keyword params
+        pos_names = [n for n in names if n not in kw_strats]
+        pos_names = pos_names[len(pos_names) - len(arg_strats):]
+        drawn = set(kw_strats) | set(pos_names)
+        fixture_params = [sig.parameters[n] for n in names if n not in drawn]
+
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            n = getattr(wrapper, "_stub_max_examples", 10)
+            rng = np.random.default_rng(zlib.crc32(fn.__name__.encode()))
+            for _ in range(n):
+                dkw = {k: s.example_for(rng) for k, s in kw_strats.items()}
+                dkw.update({k: s.example_for(rng)
+                            for k, s in zip(pos_names, arg_strats)})
+                fn(*args, **kwargs, **dkw)
+
+        # hide drawn params from pytest's fixture resolution
+        wrapper.__signature__ = sig.replace(parameters=fixture_params)
+        del wrapper.__wrapped__
+        return wrapper
+
+    return deco

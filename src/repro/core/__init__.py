@@ -7,6 +7,7 @@ Public API:
   SplitModule / SplitFunc / Mark / partition      — graph partition (Fig. 5)
   OpSchedulerBase / SchedCtx / record_plan        — programmable scheduling (Fig. 6)
   static_analysis / Realizer / realize            — backend (Alg. 1)
+  lower / LoweredPlan / LoweredPlanCache          — plan IR + capture/replay
   sequential_plan                                 — reference fallback
 """
 from .graph import FULL, OpGraph, OpNode, TensorRef
@@ -17,7 +18,9 @@ from .scheduler import (OpSchedulerBase, SchedCtx, ScheduleContext,
                         record_plan)
 from .analysis import AnalysisResult, static_analysis
 from .backend import FusedCallInfo, Realizer, realize, sequential_plan
-from .compile_cache import GLOBAL_CACHE, CompileCache
+from .lowering import LoweredPlan, LoweringError, lower
+from .compile_cache import (GLOBAL_CACHE, GLOBAL_PLAN_CACHE, CompileCache,
+                            LoweredPlanCache)
 
 __all__ = [
     "FULL", "OpGraph", "OpNode", "TensorRef",
@@ -27,5 +30,6 @@ __all__ = [
     "OpSchedulerBase", "SchedCtx", "ScheduleContext", "record_plan",
     "AnalysisResult", "static_analysis",
     "FusedCallInfo", "Realizer", "realize", "sequential_plan",
-    "GLOBAL_CACHE", "CompileCache",
+    "LoweredPlan", "LoweringError", "lower",
+    "GLOBAL_CACHE", "GLOBAL_PLAN_CACHE", "CompileCache", "LoweredPlanCache",
 ]

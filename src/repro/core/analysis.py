@@ -110,6 +110,7 @@ class AnalysisResult:
     writes: list                       # per step: [(tid, part)]
     buffer_bytes: int                  # total prealloc buffer footprint
     n_steps: int
+    plan_fingerprint: str = ""         # fingerprint of the analyzed plan
 
     def ref_count(self, key) -> int:
         """Paper Alg.1 line 4 equivalent (for tests/introspection)."""
@@ -168,4 +169,5 @@ def static_analysis(graph: OpGraph, plan: ExecutionPlan) -> AnalysisResult:
 
     buffer_bytes = sum(graph.tensors[t].nbytes for t in prealloc)
     return AnalysisResult(prealloc, death, all_reads, all_writes,
-                          buffer_bytes, len(plan.steps))
+                          buffer_bytes, len(plan.steps),
+                          plan_fingerprint=plan.fingerprint())

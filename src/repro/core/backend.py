@@ -56,20 +56,41 @@ class FusedCallInfo:
 
 
 class Realizer:
-    """Executes plans.  One instance per (graph, plan, analysis)."""
+    """Executes plans.  One instance per (graph, plan, analysis).
+
+    By default the plan is lowered once to a slot-based instruction
+    stream (``core.lowering``) and ``__call__`` replays that; pass
+    ``lowered=False`` to run the original step-by-step interpreter
+    (kept as the reference semantics for differential testing).
+    """
 
     def __init__(self, graph: OpGraph, plan: ExecutionPlan,
-                 analysis: Optional[AnalysisResult] = None):
+                 analysis: Optional[AnalysisResult] = None,
+                 lowered: bool = True, plan_cache=None, plan_salt: str = "",
+                 capture: bool = True):
         graph_nodes = graph.nodes
         self.graph = graph
         self.plan = plan
+        self.lowered = None
+        self._nodes = graph_nodes
+        if lowered:
+            if plan_cache is not None:
+                self.lowered = plan_cache.get_or_lower(
+                    graph, plan, analysis, salt=plan_salt, capture=capture)
+            else:
+                from .lowering import lower
+                self.lowered = lower(graph, plan, analysis, capture=capture)
+            self.analysis = self.lowered.analysis
+            return          # interpreter-only state built lazily if needed
         self.analysis = analysis or static_analysis(graph, plan)
+        self._build_interp_state()
+
+    def _build_interp_state(self):
         self.offsets = []
         acc = 0
-        for s in plan.split_sizes:
+        for s in self.plan.split_sizes:
             self.offsets.append(acc)
             acc += s
-        self._nodes = graph_nodes
         self._deaths_by_step: dict[int, list] = {}
         for key, d in self.analysis.death.items():
             self._deaths_by_step.setdefault(d, []).append(key)
@@ -102,14 +123,22 @@ class Realizer:
 
     def _node_params(self, node, params):
         if not node.param_paths:
-            return {} if node.members else {}
+            return {}
         resolved = {p: _resolve_path(params, p) for p in node.param_paths}
         if node.members:
+            # coalesced units take {param_path: subtree}, keyed per member
             return resolved
         return resolved[node.param_paths[0]] or {}
 
     # -- execution -----------------------------------------------------------
     def __call__(self, params, inputs: dict[str, Any]) -> dict[str, Any]:
+        if self.lowered is not None:
+            return self.lowered(params, inputs)
+        return self._interpret(params, inputs)
+
+    def _interpret(self, params, inputs: dict[str, Any]) -> dict[str, Any]:
+        if not hasattr(self, "offsets"):
+            self._build_interp_state()
         g, plan, ana = self.graph, self.plan, self.analysis
         env: dict = {}
         for name, t in g.inputs.items():
@@ -179,9 +208,10 @@ class Realizer:
 
 
 def realize(graph: OpGraph, plan: ExecutionPlan, params, inputs,
-            analysis: Optional[AnalysisResult] = None) -> dict:
+            analysis: Optional[AnalysisResult] = None,
+            lowered: bool = True) -> dict:
     """One-shot helper (tests / small models)."""
-    return Realizer(graph, plan, analysis)(params, inputs)
+    return Realizer(graph, plan, analysis, lowered=lowered)(params, inputs)
 
 
 def sequential_plan(graph: OpGraph) -> ExecutionPlan:

@@ -1,25 +1,34 @@
-"""Executable cache — the CUDA-Graph analogue (paper §3.3.2).
+"""Executable + lowered-plan caches — the CUDA-Graph analogue (§3.3.2).
 
 DynaFlow-on-GPU captures one CUDA graph per (subgraph, micro-batch config)
-and replays it; here we compile one XLA executable per
-(plan fingerprint, input shapes) bucket and dispatch to it at run time.
-The runtime dispatcher (serve engine / train loop) rounds incoming batches
-to a bucket, asks the scheduler for a plan for that bucket, and reuses the
-cached executable — dynamic schedule choice with static-graph performance.
+and replays it; here we cache at two levels:
+
+  * ``CompileCache`` — one XLA executable per (plan fingerprint, input
+    shapes) bucket.  The runtime dispatcher (serve engine / train loop)
+    rounds incoming batches to a bucket and replays the cached executable.
+  * ``LoweredPlanCache`` — one ``LoweredPlan`` per plan fingerprint, so
+    re-recording the same schedule for a new bucket/segment skips static
+    analysis *and* lowering entirely (the plan-to-dispatch hot path).
+
+Both caches are bounded LRU: bucketed serving workloads churn through
+(shape, plan) pairs and an unbounded dict grows without limit.  Evictions
+are counted in ``stats``.
 """
 from __future__ import annotations
 
 import time
+from collections import OrderedDict
 from typing import Any, Callable, Optional
 
 import jax
 
 
 class CompileCache:
-    def __init__(self):
-        self._cache: dict = {}
-        self.stats = {"hits": 0, "misses": 0, "compile_s": 0.0,
-                      "trace_s": 0.0}
+    def __init__(self, capacity: int = 128):
+        self.capacity = capacity
+        self._cache: OrderedDict = OrderedDict()
+        self.stats = {"hits": 0, "misses": 0, "evictions": 0,
+                      "compile_s": 0.0, "trace_s": 0.0}
 
     def key_for(self, plan_fp: str, inputs: dict) -> tuple:
         shapes = tuple(sorted(
@@ -31,6 +40,7 @@ class CompileCache:
                      example_args: Optional[tuple] = None):
         if key in self._cache:
             self.stats["hits"] += 1
+            self._cache.move_to_end(key)
             return self._cache[key]
         self.stats["misses"] += 1
         t0 = time.perf_counter()
@@ -41,10 +51,57 @@ class CompileCache:
             fn = jax.jit(fn).lower(*example_args).compile()
             self.stats["compile_s"] += time.perf_counter() - t0
         self._cache[key] = fn
+        self._evict()
         return fn
+
+    def _evict(self):
+        while len(self._cache) > self.capacity:
+            self._cache.popitem(last=False)
+            self.stats["evictions"] += 1
+
+    def __len__(self):
+        return len(self._cache)
+
+
+class LoweredPlanCache:
+    """LRU of ``LoweredPlan``s keyed by plan fingerprint.
+
+    The fingerprint covers graph structure, split sizes and every step
+    (including fused-kernel names), so structurally identical plans from
+    different trace runs share one lowered artifact.
+
+    The fingerprint does not see *inside* op callables, so callers that
+    build structurally identical graphs with different kernel choices must
+    disambiguate via ``salt`` (``build_forward`` salts with arch, phase
+    and scheduler class).
+    """
+
+    def __init__(self, capacity: int = 256):
+        self.capacity = capacity
+        self._cache: OrderedDict = OrderedDict()
+        self.stats = {"hits": 0, "misses": 0, "evictions": 0, "lower_s": 0.0}
+
+    def get_or_lower(self, graph, plan, analysis=None, salt="",
+                     capture=True):
+        from .lowering import lower
+        key = (plan.fingerprint(), salt, capture)
+        if key in self._cache:
+            self.stats["hits"] += 1
+            self._cache.move_to_end(key)
+            return self._cache[key]
+        self.stats["misses"] += 1
+        t0 = time.perf_counter()
+        lowered = lower(graph, plan, analysis, capture=capture)
+        self.stats["lower_s"] += time.perf_counter() - t0
+        self._cache[key] = lowered
+        while len(self._cache) > self.capacity:
+            self._cache.popitem(last=False)
+            self.stats["evictions"] += 1
+        return lowered
 
     def __len__(self):
         return len(self._cache)
 
 
 GLOBAL_CACHE = CompileCache()
+GLOBAL_PLAN_CACHE = LoweredPlanCache()

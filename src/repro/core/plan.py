@@ -75,5 +75,6 @@ def graph_fingerprint(graph: OpGraph) -> str:
         n = graph.nodes[oid]
         h.update(f"{n.name}|{n.inputs}|{n.outputs}|{n.resource}".encode())
     for name, t in sorted(graph.inputs.items()):
-        h.update(f"in:{name}:{graph.tensors[t].shape}".encode())
+        ref = graph.tensors[t]
+        h.update(f"in:{name}:{ref.shape}:{ref.dtype}".encode())
     return h.hexdigest()[:16]

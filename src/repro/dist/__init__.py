@@ -1,0 +1,9 @@
+"""Distributed substrate: mesh-aware collectives + pipeline driver.
+
+``collectives`` are the only collective entry points model code uses:
+no-ops outside a mesh (single-device tests, ``jax.eval_shape`` tracing),
+real ``lax`` collectives when the named axis is bound inside shard_map.
+"""
+from . import collectives, pipeline
+
+__all__ = ["collectives", "pipeline"]

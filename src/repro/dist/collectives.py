@@ -1,0 +1,94 @@
+"""Axis-optional collectives — no-ops without a mesh, real inside shard_map.
+
+Model code calls these unconditionally; whether they lower to actual
+collectives is decided by the axis environment at trace time.  Outside
+shard_map (single-device tests, symbolic tracing) a named axis is unbound
+and every collective degenerates to its single-participant identity:
+``psum`` -> x, ``all_gather`` -> x, ``axis_index`` -> 0, ``axis_size`` -> 1.
+This is what keeps the same model source runnable on one chip and on a
+512-chip mesh without edits (paper's transparency requirement).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+def _bound(axis: str) -> bool:
+    """True iff ``axis`` is a live mesh axis in the current trace."""
+    try:
+        lax.axis_index(axis)
+        return True
+    except NameError:
+        return False
+
+
+def axis_size(axis: str) -> int:
+    if not _bound(axis):
+        return 1
+    return lax.psum(1, axis)
+
+
+def axis_index(axis: str):
+    if not _bound(axis):
+        return jnp.int32(0)
+    return lax.axis_index(axis)
+
+
+def psum(x, axis: str):
+    if not _bound(axis):
+        return x
+    return lax.psum(x, axis)
+
+
+def pmax(x, axis: str):
+    if not _bound(axis):
+        return x
+    return lax.pmax(x, axis)
+
+
+def all_gather(x, axis: str, dim: int = 0):
+    if not _bound(axis):
+        return x
+    return lax.all_gather(x, axis, axis=dim, tiled=True)
+
+
+def reduce_scatter(x, axis: str, dim: int = 0):
+    if not _bound(axis):
+        return x
+    return lax.psum_scatter(x, axis, scatter_dimension=dim, tiled=True)
+
+
+def all_to_all(x, axis: str, split_dim: int, concat_dim: int):
+    if not _bound(axis):
+        return x
+    return lax.all_to_all(x, axis, split_axis=split_dim,
+                          concat_axis=concat_dim, tiled=True)
+
+
+def ppermute(x, axis: str, perm):
+    if not _bound(axis):
+        return x
+    return lax.ppermute(x, axis, perm)
+
+
+def compressed_psum(x, axis: str, err: Optional[jax.Array] = None):
+    """int8 block-quantized psum with error feedback.
+
+    The quantization residual is carried in ``err`` and re-injected next
+    step, so the *accumulated* compressed sum is unbiased (the standard
+    EF-SGD guarantee).  Scales are pmax'd across the axis so every
+    participant dequantizes identically.  Returns ``(reduced, new_err)``.
+    """
+    val = x if err is None else x + err
+    f32 = val.astype(jnp.float32)
+    scale = pmax(jnp.max(jnp.abs(f32)), axis) / 127.0
+    scale = jnp.maximum(scale, jnp.finfo(jnp.float32).tiny)
+    q = jnp.clip(jnp.round(f32 / scale), -127, 127).astype(jnp.int8)
+    deq_local = q.astype(jnp.float32) * scale
+    new_err = (f32 - deq_local).astype(x.dtype)
+    reduced = psum(q.astype(jnp.int32), axis).astype(jnp.float32) * scale
+    return reduced.astype(x.dtype), new_err

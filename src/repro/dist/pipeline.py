@@ -1,0 +1,53 @@
+"""Inter-stage pipeline driver (GPipe-style fill/drain over a mesh axis).
+
+``pipeline_apply`` runs one stage function per device along ``axis``:
+microbatch ``j`` visits stage ``i`` at tick ``i + j``; activations move to
+the next stage over a ring ``ppermute`` each tick (XLA overlaps the send
+with the next tick's compute).  Each device returns its local buffer of
+stage outputs — the *last* stage's buffer holds the fully-processed
+microbatches.  Stage functions must be shape-preserving (uniform
+activation shape between stages), the usual pipeline contract.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from . import collectives as col
+
+
+def pipeline_apply(fn, stage_params, mbs, axis: str = "pod"):
+    """Apply ``fn(stage_params, mb)`` pipelined over mesh axis ``axis``.
+
+    ``mbs`` is a stacked ``(n_mb, ...)`` array of microbatches, replicated
+    on every stage; ``stage_params`` are this device's stage weights.
+    Returns an ``(n_mb, ...)`` buffer; on stage ``i`` row ``j`` holds
+    microbatch ``j`` after stages ``0..i``.
+    """
+    n_stages = int(col.axis_size(axis))
+    n_mb = mbs.shape[0]
+    if n_stages == 1:
+        return lax.map(lambda mb: fn(stage_params, mb), mbs)
+    idx = col.axis_index(axis)
+    perm = [(i, (i + 1) % n_stages) for i in range(n_stages)]
+    outs = jnp.zeros_like(mbs)
+    state = jnp.zeros_like(mbs[0])
+
+    def tick(t, carry):
+        state, outs = carry
+        # stage 0 feeds fresh microbatches; later stages consume the ring
+        mb_i = jnp.clip(t, 0, n_mb - 1)
+        x_in = jnp.where(idx == 0,
+                         lax.dynamic_index_in_dim(mbs, mb_i, keepdims=False),
+                         state)
+        y = fn(stage_params, x_in)
+        slot = t - idx                      # microbatch this stage just ran
+        valid = jnp.logical_and(slot >= 0, slot < n_mb)
+        upd = lax.dynamic_update_index_in_dim(
+            outs, y, jnp.clip(slot, 0, n_mb - 1), 0)
+        outs = jnp.where(valid, upd, outs)
+        return col.ppermute(y, axis, perm), outs
+
+    _, outs = lax.fori_loop(0, n_mb + n_stages - 1, tick, (state, outs))
+    return outs

@@ -25,7 +25,9 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, *, causal, sm_scale,
     # q_ref: (1, block_q, hd); k_ref/v_ref: (1, seq_k, hd)
     _, block_q, hd = q_ref.shape
     qi = pl.program_id(1)
-    q = q_ref[0].astype(jnp.float32) * sm_scale
+    # full-block loads + array indexing (older pallas interpret mode does
+    # not discharge raw-int ref indices)
+    q = q_ref[...][0].astype(jnp.float32) * sm_scale
 
     n_kb = seq_k // block_k
     if causal:
@@ -36,8 +38,10 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, *, causal, sm_scale,
 
     def body(kb, carry):
         acc, m, l = carry
-        k = pl.load(k_ref, (0, pl.ds(kb * block_k, block_k), slice(None)))
-        v = pl.load(v_ref, (0, pl.ds(kb * block_k, block_k), slice(None)))
+        k = pl.load(k_ref, (pl.ds(0, 1),
+                            pl.ds(kb * block_k, block_k), slice(None)))[0]
+        v = pl.load(v_ref, (pl.ds(0, 1),
+                            pl.ds(kb * block_k, block_k), slice(None)))[0]
         s = q @ k.astype(jnp.float32).T                     # (bq, bk)
         if causal:
             qpos = qi * block_q + lax.broadcasted_iota(
@@ -56,7 +60,8 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, *, causal, sm_scale,
     m0 = jnp.full((block_q,), NEG_INF, jnp.float32)
     l0 = jnp.zeros((block_q,), jnp.float32)
     acc, m, l = lax.fori_loop(0, hi, body, (acc0, m0, l0))
-    o_ref[0] = (acc / jnp.maximum(l, 1e-20)[:, None]).astype(o_ref.dtype)
+    o_ref[...] = (acc / jnp.maximum(l, 1e-20)[:, None]).astype(
+        o_ref.dtype)[None]
 
 
 def flash_attention(q, k, v, *, causal: bool = True,

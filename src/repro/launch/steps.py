@@ -58,8 +58,13 @@ def _opt_specs(param_sdss, param_specs):
 def build_global_train_step(model, scheduler: OpSchedulerBase,
                             shape: ShapeConfig, mesh,
                             tcfg: TrainStepConfig = None,
-                            remat_policy: str = "full"):
+                            remat_policy: str = "full",
+                            lowered: bool = None):
+    # lowered=None defers to tcfg (default True); an explicit bool wins
     tcfg = tcfg or TrainStepConfig(remat=True, remat_policy=remat_policy)
+    if lowered is not None and lowered != tcfg.lowered:
+        import dataclasses as _dc
+        tcfg = _dc.replace(tcfg, lowered=lowered)
     batch_sdss, batch_shd, B_loc, _ = global_batch_specs(
         model, "train", shape.seq_len, shape.global_batch, mesh)
     info = _sched_info(model.cfg.name, shape, B_loc, mesh)
@@ -102,14 +107,15 @@ def _kv_collect_specs(out_env, mesh, replicated):
 
 
 def build_global_prefill_step(model, scheduler: OpSchedulerBase,
-                              shape: ShapeConfig, mesh):
+                              shape: ShapeConfig, mesh,
+                              lowered: bool = True):
     batch_sdss, batch_shd, B_loc, repl = global_batch_specs(
         model, "prefill", shape.seq_len, shape.global_batch, mesh,
         s_max=shape.seq_len)
     info = _sched_info(model.cfg.name, shape, B_loc, mesh)
     segs, binputs = model.build_segments("prefill", B_loc, shape.seq_len,
                                          s_max=shape.seq_len)
-    fwd = build_forward(segs, scheduler, info)
+    fwd = build_forward(segs, scheduler, info, lowered=lowered)
     p_sdss, p_shd = global_param_specs(model, segs, mesh)
     p_specs = shard_specs_of(p_shd)
     batch_specs = shard_specs_of(batch_shd)
@@ -140,14 +146,15 @@ def build_global_prefill_step(model, scheduler: OpSchedulerBase,
 
 
 def build_global_decode_step(model, scheduler: OpSchedulerBase,
-                             shape: ShapeConfig, mesh):
+                             shape: ShapeConfig, mesh,
+                             lowered: bool = True):
     s_max = shape.seq_len
     batch_sdss, batch_shd, B_loc, repl = global_batch_specs(
         model, "decode", shape.seq_len, shape.global_batch, mesh,
         s_max=s_max)
     info = _sched_info(model.cfg.name, shape, B_loc, mesh)
     segs, binputs = model.build_segments("decode", B_loc, 1, s_max=s_max)
-    fwd = build_forward(segs, scheduler, info)
+    fwd = build_forward(segs, scheduler, info, lowered=lowered)
     p_sdss, p_shd = global_param_specs(model, segs, mesh)
     p_specs = shard_specs_of(p_shd)
     batch_specs = shard_specs_of(batch_shd)

@@ -132,8 +132,22 @@ def build_forward(segments: Sequence[Segment],
                   scheduler: OpSchedulerBase,
                   info: ScheduleContext,
                   remat: bool = False,
-                  remat_policy: str = "full") -> Forward:
-    """Partition + schedule every segment graph, returning the Forward."""
+                  remat_policy: str = "full",
+                  lowered: bool = True,
+                  plan_cache=None) -> Forward:
+    """Partition + schedule every segment graph, returning the Forward.
+
+    ``lowered=True`` (default) compiles each segment plan to the slot-based
+    instruction stream.  Pass a ``LoweredPlanCache`` as ``plan_cache`` to
+    share lowered plans across builds (keyed by plan fingerprint + an
+    (arch, phase, scheduler, segment) salt): rebuilding the same
+    (segment, bucket) pair then skips static analysis and lowering
+    entirely.  The cache must be scoped to one (model, mesh) — plan
+    fingerprints see graph structure and shapes, not op closures, so a
+    process-global cache could alias structurally identical graphs with
+    different shard layouts (the serve engine keeps one per engine).
+    """
+    salt = f"{info.arch}|{info.phase}|{type(scheduler).__name__}"
     realizers = {}
     segs = []
     for seg in segments:
@@ -143,7 +157,9 @@ def build_forward(segments: Sequence[Segment],
             g = partition(g, rules, default_depth=2)
         plan = record_plan(g, scheduler, info)
         seg = dataclasses.replace(seg, graph=g)
-        realizers[seg.key] = Realizer(g, plan)
+        realizers[seg.key] = Realizer(g, plan, lowered=lowered,
+                                      plan_cache=plan_cache,
+                                      plan_salt=f"{salt}|{seg.key}")
         segs.append(seg)
     return Forward(segs, realizers, remat=remat, remat_policy=remat_policy)
 

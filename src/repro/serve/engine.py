@@ -20,7 +20,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ..core.compile_cache import CompileCache
+from ..core.compile_cache import CompileCache, LoweredPlanCache
 from ..core.scheduler import OpSchedulerBase, ScheduleContext
 from ..models.base import build_forward
 from .kv_cache import KVCacheManager
@@ -46,6 +46,7 @@ class ServeConfig:
     s_max: int = 256
     prefill_buckets: tuple = (32, 64, 128, 256)
     greedy: bool = True
+    lowered: bool = True               # slot-based lowered plan replay
 
 
 class ServeEngine:
@@ -57,6 +58,7 @@ class ServeEngine:
         self.cfg = cfg
         self.cache = KVCacheManager(model, cfg.max_batch, cfg.s_max)
         self.compile_cache = CompileCache()
+        self.plan_cache = LoweredPlanCache() if cfg.lowered else None
         self.waiting: list[Request] = []
         self.active: dict[int, Request] = {}     # row -> request
         self.finished: list[Request] = []
@@ -80,7 +82,11 @@ class ServeEngine:
 
     @property
     def stats(self):
-        return dict(self._stats)
+        out = dict(self._stats)
+        out["compile_cache"] = dict(self.compile_cache.stats)
+        if self.plan_cache is not None:
+            out["plan_cache"] = dict(self.plan_cache.stats)
+        return out
 
     # -- prefill ----------------------------------------------------------
     def _bucket(self, n: int) -> int:
@@ -95,7 +101,9 @@ class ServeEngine:
                                                 s_max=self.cfg.s_max)
             info = ScheduleContext(local_batch=1, seq_len=bucket,
                                    phase="prefill", arch=self.model.cfg.name)
-            fwd = build_forward(segs, self.scheduler, info)
+            fwd = build_forward(segs, self.scheduler, info,
+                                lowered=self.cfg.lowered,
+                                plan_cache=self.plan_cache)
 
             def run(params, ids, positions):
                 return fwd(params, {"ids": ids, "positions": positions})
@@ -153,7 +161,9 @@ class ServeEngine:
             info = ScheduleContext(local_batch=self.cfg.max_batch,
                                    seq_len=self.cfg.s_max, phase="decode",
                                    arch=self.model.cfg.name)
-            fwd = build_forward(segs, self.scheduler, info)
+            fwd = build_forward(segs, self.scheduler, info,
+                                lowered=self.cfg.lowered,
+                                plan_cache=self.plan_cache)
 
             def run(params, ids, positions, cache_len, caches):
                 batch = {"ids": ids, "positions": positions,

@@ -58,6 +58,7 @@ def train_loop(train_step: Callable, params, opt_state, pipeline,
     it = iter(pipeline)
     step = start
     retries = 0
+    first_step = True       # first step pays trace+compile, not a straggler
     while step < cfg.steps:
         batch = next(it)
         if to_device:
@@ -85,11 +86,13 @@ def train_loop(train_step: Callable, params, opt_state, pipeline,
                 log(f"step failed; restarted from checkpoint at {step}")
             continue
         dt = time.perf_counter() - t0
-        if cfg.step_deadline_s and dt > cfg.step_deadline_s:
+        if cfg.step_deadline_s and dt > cfg.step_deadline_s \
+                and not first_step:
             if log:
                 log(f"straggler: step {step} took {dt:.3f}s "
                     f"(deadline {cfg.step_deadline_s:.3f}s)")
             metrics["straggler"] = 1.0
+        first_step = False
         retries = 0
         metrics.update(step=step, step_time_s=dt)
         history.append(metrics)

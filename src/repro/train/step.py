@@ -36,6 +36,7 @@ class TrainStepConfig:
     compress_grads: bool = False     # int8 DP all-reduce + error feedback
     warmup: int = 100
     total_steps: int = 10000
+    lowered: bool = True             # slot-based lowered plan replay
 
 
 def _flat_axes(pspec) -> set:
@@ -113,7 +114,7 @@ def build_train_step(model, scheduler: OpSchedulerBase, B_loc: int, S: int,
         local_batch=B_loc, global_batch=B_loc, seq_len=S, phase="train",
         arch=model.cfg.name)
     fwd = build_forward(segs, scheduler, info, remat=cfg.remat,
-                        remat_policy=cfg.remat_policy)
+                        remat_policy=cfg.remat_policy, lowered=cfg.lowered)
     pspecs = model.param_pspecs(segs)
     sp_train = bool(getattr(model.cfg, "seq_parallel", False))
     mesh_info = model.mesh

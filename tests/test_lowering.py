@@ -1,0 +1,303 @@
+"""Lowering (plan IR) tests: the lowered slot-based Realizer must be a
+perfect stand-in for the step-by-step interpreter.
+
+  * differential property test — random DAGs × random valid schedules
+    (splits, merges, slot-reuse-heavy chains, fused groups) produce
+    bitwise-identical outputs interpreted vs lowered,
+  * regression — lowering rejects (plan, analysis, graph) triples whose
+    fingerprints disagree,
+  * cache behavior — LRU bounds + eviction counters, capture/replay.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (FULL, LoweringError, OpSchedulerBase, Realizer,
+                        ScheduleContext, lower, realize, record_plan,
+                        static_analysis, trace)
+from repro.core.compile_cache import CompileCache, LoweredPlanCache
+from repro.core.module import Module, Op, Param
+from repro.core.plan import OpHandle
+
+
+D = 8
+
+
+class Lin(Op):
+    def __init__(self, d_in, d_out, name):
+        super().__init__()
+        self.w = Param((d_in, d_out), jnp.float32)
+        self.named(name)
+
+    def kernel(self, p, x):
+        return jnp.tanh(x @ p["w"])
+
+
+class AddOp(Op):
+    def kernel(self, p, a, b):
+        return a + b
+
+
+class RandomNet(Module):
+    """Random DAG: chain of Lins with Add-merges of random earlier taps."""
+
+    def __init__(self, seed, n_ops):
+        super().__init__()
+        rng = np.random.default_rng(seed)
+        self.wiring = []
+        for i in range(n_ops):
+            if i >= 2 and rng.random() < 0.4:
+                self.wiring.append(("add", int(rng.integers(i)),
+                                    int(rng.integers(i))))
+                setattr(self, f"op{i}", AddOp().named(f"add{i}"))
+            else:
+                self.wiring.append(("lin", int(rng.integers(i + 1)) - 1, -1))
+                setattr(self, f"op{i}", Lin(D, D, f"lin{i}"))
+
+    def forward(self, x):
+        vals = [x]
+        for i, (kind, a, b) in enumerate(self.wiring):
+            op = getattr(self, f"op{i}")
+            if kind == "add":
+                vals.append(op(vals[a + 1], vals[b + 1]))
+            else:
+                vals.append(op(vals[a + 1]))
+        return vals[-1]
+
+
+class RandomScheduler(OpSchedulerBase):
+    def __init__(self, seed, split_sizes, merge_prob):
+        self.rng = np.random.default_rng(seed)
+        self.split_sizes = split_sizes
+        self.merge_prob = merge_prob
+
+    def schedule(self, ctx):
+        if self.split_sizes:
+            ctx.split(self.split_sizes)
+        parts = (list(range(len(self.split_sizes)))
+                 if self.split_sizes else [FULL])
+        while True:
+            ready = [h for i in parts for h in ctx.get_ready_ops(i)]
+            if not ready:
+                break
+            if self.split_sizes and self.rng.random() < self.merge_prob:
+                by_oid = {}
+                for h in ready:
+                    by_oid.setdefault(h.oid, []).append(h)
+                full = [v for v in by_oid.values()
+                        if len(v) == len(self.split_sizes)]
+                if full:
+                    ctx.execute(tuple(full[self.rng.integers(len(full))]))
+                    continue
+            ctx.execute(ready[self.rng.integers(len(ready))])
+
+
+def _setup(seed=0, n_ops=5):
+    net = RandomNet(seed, n_ops)
+    g = trace(net, {"x": jax.ShapeDtypeStruct((8, D), jnp.float32)})
+    params = net.init(jax.random.PRNGKey(seed))
+    x = jax.random.normal(jax.random.PRNGKey(seed + 1), (8, D))
+    return g, params, x
+
+
+def _assert_same(a: dict, b: dict):
+    assert set(a) == set(b)
+    for k in a:
+        np.testing.assert_array_equal(np.asarray(a[k]), np.asarray(b[k]),
+                                      err_msg=f"output {k!r} diverged")
+
+
+# ---------------------------------------------------------------------------
+# differential: lowered == interpreted, bitwise
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 10_000),
+       n_ops=st.integers(3, 8),
+       split=st.sampled_from([(), (4, 4), (2, 6), (2, 2, 4)]),
+       merge_prob=st.floats(0.0, 0.9))
+def test_differential_random_graphs_and_schedules(seed, n_ops, split,
+                                                  merge_prob):
+    g, params, x = _setup(seed % 50, n_ops)
+    sched = RandomScheduler(seed, split, merge_prob)
+    plan = record_plan(g, sched, ScheduleContext(local_batch=8))
+    want = Realizer(g, plan, lowered=False)(params, {"x": x})
+    got = Realizer(g, plan, lowered=True)(params, {"x": x})
+    _assert_same(want, got)
+
+
+def test_differential_slot_reuse_heavy():
+    """Long per-micro-batch chain: env keys die every step, so the slot
+    allocator must recycle aggressively — and results must not change."""
+    class Chain(Module):
+        def __init__(self, n=10):
+            super().__init__()
+            self.n = n
+            for i in range(n):
+                setattr(self, f"l{i}", Lin(D, D, f"l{i}"))
+
+        def forward(self, x):
+            for i in range(self.n):
+                x = getattr(self, f"l{i}")(x)
+            return x
+
+    net = Chain()
+    g = trace(net, {"x": jax.ShapeDtypeStruct((8, D), jnp.float32)})
+    params = net.init(jax.random.PRNGKey(0))
+    x = jax.random.normal(jax.random.PRNGKey(1), (8, D))
+
+    class PerPartThenMerge(OpSchedulerBase):
+        def schedule(self, ctx):
+            ctx.split([4, 4])
+            oids = ctx.graph.topo_order()
+            for oid in oids[:-1]:          # per-part chain
+                for p in (0, 1):
+                    ctx.execute(OpHandle(oid, p, ""))
+            ctx.execute(tuple(OpHandle(oids[-1], p, "") for p in (0, 1)))
+
+    plan = record_plan(g, PerPartThenMerge(), ScheduleContext(local_batch=8))
+    lowered = lower(g, plan)
+    # liveness-driven reuse: far fewer slots than live keys, and at least
+    # one prealloc buffer created via the first-producer pad
+    assert lowered.stats["slots_reused"] > 0
+    assert lowered.n_slots < lowered.stats["n_env_keys"]
+    assert lowered.stats["pad_inits"] == 1
+    want = Realizer(g, plan, lowered=False)(params, {"x": x})
+    _assert_same(want, lowered(params, {"x": x}))
+
+
+def test_differential_fused_step():
+    """A fused group replacement must see pre-resolved params and produce
+    the group's external outputs identically in both backends."""
+    class TwoLin(Module):
+        def __init__(self):
+            super().__init__()
+            self.a = Lin(D, D, "a")
+            self.b = Lin(D, D, "b")
+            self.c = Lin(D, D, "c")
+
+        def forward(self, x):
+            return self.c(self.b(self.a(x)))
+
+    net = TwoLin()
+    g = trace(net, {"x": jax.ShapeDtypeStruct((8, D), jnp.float32)})
+    params = net.init(jax.random.PRNGKey(0))
+    x = jax.random.normal(jax.random.PRNGKey(1), (8, D))
+
+    def fused_ab(info, xin):
+        pa = info.params_of(0)
+        pb = info.params_of(1)
+        return jnp.tanh(jnp.tanh(xin @ pa["w"]) @ pb["w"])
+
+    class FuseFirstTwo(OpSchedulerBase):
+        def schedule(self, ctx):
+            oids = ctx.graph.topo_order()
+            ctx.execute((OpHandle(oids[0], FULL, "a"),
+                         OpHandle(oids[1], FULL, "b")),
+                        replace_func=fused_ab, replace_name="fused_ab")
+            ctx.run_rest_sequential()
+
+    plan = record_plan(g, FuseFirstTwo(), ScheduleContext(local_batch=8))
+    want = Realizer(g, plan, lowered=False)(params, {"x": x})
+    got = Realizer(g, plan, lowered=True)(params, {"x": x})
+    _assert_same(want, got)
+    # direct-mode reference
+    ref = net.apply(params, x)
+    np.testing.assert_allclose(np.asarray(got["out"]), np.asarray(ref),
+                               atol=1e-6)
+
+
+def test_differential_under_jit():
+    g, params, x = _setup(3, 6)
+    plan = record_plan(g, RandomScheduler(7, (4, 4), 0.5),
+                       ScheduleContext(local_batch=8))
+    rz_i = Realizer(g, plan, lowered=False)
+    rz_l = Realizer(g, plan, lowered=True)
+    out_i = jax.jit(lambda p, v: rz_i(p, {"x": v})["out"])(params, x)
+    out_l = jax.jit(lambda p, v: rz_l(p, {"x": v})["out"])(params, x)
+    np.testing.assert_allclose(np.asarray(out_i), np.asarray(out_l),
+                               atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# regression: fingerprint validation
+# ---------------------------------------------------------------------------
+
+
+def test_lowering_rejects_mismatched_analysis():
+    g, params, x = _setup(0, 5)
+    plan_a = record_plan(g, RandomScheduler(1, (4, 4), 0.3),
+                         ScheduleContext(local_batch=8))
+    plan_b = record_plan(g, RandomScheduler(2, (2, 6), 0.6),
+                         ScheduleContext(local_batch=8))
+    assert plan_a.fingerprint() != plan_b.fingerprint()
+    ana_a = static_analysis(g, plan_a)
+    with pytest.raises(LoweringError, match="belongs to plan"):
+        lower(g, plan_b, ana_a)
+
+
+def test_lowering_rejects_mismatched_graph():
+    g1, _, _ = _setup(0, 5)
+    g2, _, _ = _setup(1, 6)
+    plan = record_plan(g1, RandomScheduler(1, (), 0.0),
+                       ScheduleContext(local_batch=8))
+    with pytest.raises(LoweringError, match="recorded for graph"):
+        lower(g2, plan)
+
+
+# ---------------------------------------------------------------------------
+# caches: LRU bounds, eviction counters, capture/replay
+# ---------------------------------------------------------------------------
+
+
+def test_lowered_plan_cache_lru_and_eviction_counter():
+    g, params, x = _setup(0, 5)
+    cache = LoweredPlanCache(capacity=2)
+    plans = [record_plan(g, RandomScheduler(s, (4, 4), 0.4),
+                         ScheduleContext(local_batch=8)) for s in range(5)]
+    fps = {p.fingerprint() for p in plans}
+    assert len(fps) >= 3                     # distinct schedules
+    for p in plans:
+        cache.get_or_lower(g, p)
+    assert len(cache) <= 2
+    assert cache.stats["evictions"] >= len(fps) - 2
+    # hit path
+    lowered = cache.get_or_lower(g, plans[-1])
+    assert cache.stats["hits"] >= 1
+    _assert_same(Realizer(g, plans[-1], lowered=False)(params, {"x": x}),
+                 lowered(params, {"x": x}))
+
+
+def test_compile_cache_lru_and_eviction_counter():
+    cache = CompileCache(capacity=3)
+    for i in range(7):
+        cache.get_or_build(("k", i), lambda i=i: (lambda: i))
+    assert len(cache) == 3
+    assert cache.stats["evictions"] == 4
+    assert cache.stats["misses"] == 7
+    # most-recent keys survive
+    assert cache.get_or_build(("k", 6), lambda: None)() == 6
+    assert cache.stats["hits"] == 1
+
+
+def test_capture_replay_reuses_jaxpr():
+    g, params, x = _setup(2, 6)
+    plan = record_plan(g, RandomScheduler(5, (4, 4), 0.4),
+                       ScheduleContext(local_batch=8))
+    rz = Realizer(g, plan, lowered=True)
+    jax.make_jaxpr(lambda p, v: rz(p, {"x": v}))(params, x)
+    assert rz.lowered.stats.get("captures") == 1
+    jax.make_jaxpr(lambda p, v: rz(p, {"x": v}))(params, x)
+    assert rz.lowered.stats.get("replays", 0) >= 1
+    assert rz.lowered.stats.get("captures") == 1   # no re-capture
+
+
+def test_realize_helper_paths_agree():
+    g, params, x = _setup(4, 7)
+    plan = record_plan(g, RandomScheduler(9, (2, 6), 0.7),
+                       ScheduleContext(local_batch=8))
+    _assert_same(realize(g, plan, params, {"x": x}, lowered=False),
+                 realize(g, plan, params, {"x": x}, lowered=True))
