@@ -12,6 +12,11 @@ Key rows:
   overhead/build_interpreted   analysis + interpreter build + full trace
   overhead/build_lowered       warm plan-cache hit + capture replay trace
   overhead/build_speedup       the paper's capture-vs-interpret claim
+  overhead/multibucket_*       PlanStore cross-bucket warm-up: the first
+                               prefill bucket pays the full lowering, every
+                               later bucket specializes the canonical one
+  overhead/planstore_share_rate  fraction of cold bucket warm-ups served
+                               by specialization (CI gates this > 0)
 """
 import time
 
@@ -30,9 +35,8 @@ def _time(fn, n=20, warmup=2):
 
 def run():
     from repro.configs import get_smoke_config
-    from repro.core import (Realizer, lower, partition, record_plan,
-                            static_analysis)
-    from repro.core.compile_cache import LoweredPlanCache
+    from repro.core import (PlanStore, Realizer, lower, partition,
+                            record_plan, static_analysis)
     from repro.core.scheduler import ScheduleContext
     from repro.core.strategies import get_strategy
     from repro.models.layers import MeshInfo
@@ -70,7 +74,7 @@ def run():
     lay_params = seg.module.init(jax.random.PRNGKey(0))
     seg_inputs = {k: jnp.zeros(g.tensors[t].shape, g.tensors[t].dtype)
                   for k, t in g.inputs.items()}
-    plan_cache = LoweredPlanCache()
+    plan_cache = PlanStore()
     plan_cache.get_or_lower(g, plan)                     # warm, as in serving
 
     def build_interpreted():
@@ -105,10 +109,56 @@ def run():
     out.append(f"overhead/plan_to_dispatch_interpreted,{t_pi:.1f},us")
     out.append(f"overhead/plan_to_dispatch_lowered,{t_pl:.1f},us")
 
+    # -- multi-bucket warm-up: lowering cost paid once, not once/bucket --
+    # Prefill buckets re-trace structurally identical layer programs at
+    # different sequence lengths.  The PlanStore lowers the first bucket
+    # (fingerprint-v2 miss: Alg. 1 + slot allocation) and serves every
+    # later bucket by specializing that canonical lowering.
+    buckets = (16, 32, 64)
+    bucket_pairs = []
+    for b in buckets:
+        psegs, _ = model.build_segments("prefill", 1, b, s_max=128)
+        pseg = [s for s in psegs if s.count > 1][0]
+        pinfo = ScheduleContext(local_batch=1, seq_len=b, phase="prefill",
+                                arch=cfg.name)
+        pplan = record_plan(pseg.graph, get_strategy("dynamic"), pinfo)
+        bucket_pairs.append((pseg.graph, pplan))
+    op_cfg = model.op_closure_config()
+
+    def warm_first():                    # full lower, fresh store each time
+        PlanStore().get_or_lower(*bucket_pairs[0], salt="prefill",
+                                 op_config=op_cfg)
+
+    def warm_rest():                     # buckets 2..N: specialize path
+        store = PlanStore()
+        store.get_or_lower(*bucket_pairs[0], salt="prefill",
+                           op_config=op_cfg)
+        t0 = time.perf_counter()
+        for gb, pb in bucket_pairs[1:]:
+            store.get_or_lower(gb, pb, salt="prefill", op_config=op_cfg)
+        dt = (time.perf_counter() - t0) / (len(buckets) - 1)
+        assert store.stats["shares"] == len(buckets) - 1, store.stats
+        return dt
+
+    # best-of-k: these are ~100us one-shot paths, where mean-of-k soaks
+    # up allocator/GC noise that the steady-state serving path never sees
+    warm_first()
+    t_first = min(_time(warm_first, n=5) for _ in range(8))
+    t_shared = min(warm_rest() for _ in range(40)) * 1e6
+    out.append(f"overhead/multibucket_warmup_first,{t_first:.1f},us")
+    out.append(f"overhead/multibucket_warmup_shared,{t_shared:.1f},us")
+    out.append(f"overhead/multibucket_share_speedup,"
+               f"{t_first / max(t_shared, 1e-9):.1f},x")
+
+    # end-to-end share rate over one store warming all buckets
+    store = PlanStore()
+    for gb, pb in bucket_pairs:
+        store.get_or_lower(gb, pb, salt="prefill", op_config=op_cfg)
+    out.append(f"overhead/planstore_share_rate,{store.share_rate:.3f},ratio")
+
     # compiled dispatch: cache hit vs miss (CUDA-graph replay analogue)
-    from repro.core.compile_cache import CompileCache
     from repro.models.base import build_forward
-    cache = CompileCache()
+    cache = PlanStore()
     fwd = build_forward(segs, get_strategy("sequential"), info)
     params = model._init_from_segments(segs, jax.random.PRNGKey(0))
     batch = {"ids": jnp.ones((B, S), jnp.int32),

@@ -52,9 +52,11 @@ def main():
     print(f"TTFT p50={np.percentile(ttft, 50)*1e3:.0f}ms "
           f"p99={np.percentile(ttft, 99)*1e3:.0f}ms")
     print(f"engine stats: {eng.stats}")
-    print(f"compile cache: {eng.compile_cache.stats['misses']} builds, "
-          f"{eng.compile_cache.stats['hits']} replays "
-          f"(the CUDA-graph-capture analogue)")
+    ps = eng.store.snapshot()
+    print(f"plan store: {ps['exec_misses']} builds, {ps['exec_hits']} "
+          f"replays (the CUDA-graph-capture analogue); "
+          f"{ps['misses']} lowered, {ps['shares']} shared across buckets "
+          f"(share rate {ps['share_rate']:.0%})")
     assert all(len(r.output) == args.max_new for r in done)
     print("serve_batched OK")
 

@@ -7,18 +7,21 @@ Public API:
   SplitModule / SplitFunc / Mark / partition      — graph partition (Fig. 5)
   OpSchedulerBase / SchedCtx / record_plan        — programmable scheduling (Fig. 6)
   static_analysis / Realizer / realize            — backend (Alg. 1)
-  lower / LoweredPlan / LoweredPlanCache          — plan IR + capture/replay
+  lower / LoweredPlan / specialize                — plan IR + capture/replay
+  PlanStore / fingerprint_v2                      — unified plan/exec cache
   sequential_plan                                 — reference fallback
 """
 from .graph import FULL, OpGraph, OpNode, TensorRef
 from .module import FnOp, Module, Op, Param, mark, trace
 from .partition import Mark, SplitEveryOp, SplitFunc, SplitModule, partition
-from .plan import ExecutionPlan, OpHandle, PlanStep, graph_fingerprint
+from .plan import (ExecutionPlan, OpHandle, PlanStep, graph_fingerprint,
+                   structural_fingerprint)
 from .scheduler import (OpSchedulerBase, SchedCtx, ScheduleContext,
                         record_plan)
 from .analysis import AnalysisResult, static_analysis
 from .backend import FusedCallInfo, Realizer, realize, sequential_plan
-from .lowering import LoweredPlan, LoweringError, lower
+from .lowering import LoweredPlan, LoweringError, lower, specialize
+from .plan_store import GLOBAL_STORE, PlanStore, fingerprint_v2
 from .compile_cache import (GLOBAL_CACHE, GLOBAL_PLAN_CACHE, CompileCache,
                             LoweredPlanCache)
 
@@ -27,9 +30,11 @@ __all__ = [
     "FnOp", "Module", "Op", "Param", "mark", "trace",
     "Mark", "SplitEveryOp", "SplitFunc", "SplitModule", "partition",
     "ExecutionPlan", "OpHandle", "PlanStep", "graph_fingerprint",
+    "structural_fingerprint",
     "OpSchedulerBase", "SchedCtx", "ScheduleContext", "record_plan",
     "AnalysisResult", "static_analysis",
     "FusedCallInfo", "Realizer", "realize", "sequential_plan",
-    "LoweredPlan", "LoweringError", "lower",
+    "LoweredPlan", "LoweringError", "lower", "specialize",
+    "GLOBAL_STORE", "PlanStore", "fingerprint_v2",
     "GLOBAL_CACHE", "GLOBAL_PLAN_CACHE", "CompileCache", "LoweredPlanCache",
 ]

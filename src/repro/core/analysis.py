@@ -14,7 +14,6 @@ runtime uses (`resolve_read`), so the two can never disagree.
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
 
 from .graph import FULL, OpGraph, TensorRef
 from .plan import ExecutionPlan, PlanStep

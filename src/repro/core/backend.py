@@ -17,9 +17,8 @@ Data-flow follows the static analysis verbatim:
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, Optional
+from typing import Any, Optional
 
-import jax
 import jax.numpy as jnp
 from jax import lax
 
@@ -67,7 +66,7 @@ class Realizer:
     def __init__(self, graph: OpGraph, plan: ExecutionPlan,
                  analysis: Optional[AnalysisResult] = None,
                  lowered: bool = True, plan_cache=None, plan_salt: str = "",
-                 capture: bool = True):
+                 capture: bool = True, op_config=()):
         graph_nodes = graph.nodes
         self.graph = graph
         self.plan = plan
@@ -76,7 +75,8 @@ class Realizer:
         if lowered:
             if plan_cache is not None:
                 self.lowered = plan_cache.get_or_lower(
-                    graph, plan, analysis, salt=plan_salt, capture=capture)
+                    graph, plan, analysis, salt=plan_salt, capture=capture,
+                    op_config=op_config)
             else:
                 from .lowering import lower
                 self.lowered = lower(graph, plan, analysis, capture=capture)

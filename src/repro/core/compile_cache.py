@@ -1,107 +1,51 @@
-"""Executable + lowered-plan caches — the CUDA-Graph analogue (§3.3.2).
+"""Deprecated shim — the split caches merged into ``core/plan_store.py``.
 
-DynaFlow-on-GPU captures one CUDA graph per (subgraph, micro-batch config)
-and replays it; here we cache at two levels:
-
-  * ``CompileCache`` — one XLA executable per (plan fingerprint, input
-    shapes) bucket.  The runtime dispatcher (serve engine / train loop)
-    rounds incoming batches to a bucket and replays the cached executable.
-  * ``LoweredPlanCache`` — one ``LoweredPlan`` per plan fingerprint, so
-    re-recording the same schedule for a new bucket/segment skips static
-    analysis *and* lowering entirely (the plan-to-dispatch hot path).
-
-Both caches are bounded LRU: bucketed serving workloads churn through
-(shape, plan) pairs and an unbounded dict grows without limit.  Evictions
-are counted in ``stats``.
+``CompileCache`` (executables) and ``LoweredPlanCache`` (lowered plans)
+were unified into the single two-level ``PlanStore``; see that module for
+the fingerprint-v2 / shape-bucket key schema.  These aliases keep old
+import sites working: each is a ``PlanStore`` restricted to one level,
+with the legacy ``capacity`` constructor argument, ``len()`` scope, and
+``stats`` key names (``CompileCache`` mirrors the store's ``exec_*``
+counters back onto the old ``hits``/``misses``/``evictions`` keys).
+``GLOBAL_CACHE``/``GLOBAL_PLAN_CACHE`` both alias the raw
+``GLOBAL_STORE`` — its ``stats`` uses the new split key names and its
+``len()`` spans both levels.
 """
 from __future__ import annotations
 
-import time
-from collections import OrderedDict
-from typing import Any, Callable, Optional
-
-import jax
+from .plan_store import GLOBAL_STORE, PlanStore
 
 
-class CompileCache:
-    def __init__(self, capacity: int = 128):
-        self.capacity = capacity
-        self._cache: OrderedDict = OrderedDict()
-        self.stats = {"hits": 0, "misses": 0, "evictions": 0,
-                      "compile_s": 0.0, "trace_s": 0.0}
-
-    def key_for(self, plan_fp: str, inputs: dict) -> tuple:
-        shapes = tuple(sorted(
-            (k, tuple(v.shape), str(getattr(v, "dtype", type(v))))
-            for k, v in inputs.items()))
-        return (plan_fp, shapes)
-
-    def get_or_build(self, key, build: Callable[[], Callable],
-                     example_args: Optional[tuple] = None):
-        if key in self._cache:
-            self.stats["hits"] += 1
-            self._cache.move_to_end(key)
-            return self._cache[key]
-        self.stats["misses"] += 1
-        t0 = time.perf_counter()
-        fn = build()
-        self.stats["trace_s"] += time.perf_counter() - t0
-        if example_args is not None:
-            t0 = time.perf_counter()
-            fn = jax.jit(fn).lower(*example_args).compile()
-            self.stats["compile_s"] += time.perf_counter() - t0
-        self._cache[key] = fn
-        self._evict()
-        return fn
-
-    def _evict(self):
-        while len(self._cache) > self.capacity:
-            self._cache.popitem(last=False)
-            self.stats["evictions"] += 1
-
-    def __len__(self):
-        return len(self._cache)
-
-
-class LoweredPlanCache:
-    """LRU of ``LoweredPlan``s keyed by plan fingerprint.
-
-    The fingerprint covers graph structure, split sizes and every step
-    (including fused-kernel names), so structurally identical plans from
-    different trace runs share one lowered artifact.
-
-    The fingerprint does not see *inside* op callables, so callers that
-    build structurally identical graphs with different kernel choices must
-    disambiguate via ``salt`` (``build_forward`` salts with arch, phase
-    and scheduler class).
-    """
+class LoweredPlanCache(PlanStore):
+    """Legacy alias: plan level of a ``PlanStore``."""
 
     def __init__(self, capacity: int = 256):
+        super().__init__(plan_capacity=capacity)
         self.capacity = capacity
-        self._cache: OrderedDict = OrderedDict()
-        self.stats = {"hits": 0, "misses": 0, "evictions": 0, "lower_s": 0.0}
-
-    def get_or_lower(self, graph, plan, analysis=None, salt="",
-                     capture=True):
-        from .lowering import lower
-        key = (plan.fingerprint(), salt, capture)
-        if key in self._cache:
-            self.stats["hits"] += 1
-            self._cache.move_to_end(key)
-            return self._cache[key]
-        self.stats["misses"] += 1
-        t0 = time.perf_counter()
-        lowered = lower(graph, plan, analysis, capture=capture)
-        self.stats["lower_s"] += time.perf_counter() - t0
-        self._cache[key] = lowered
-        while len(self._cache) > self.capacity:
-            self._cache.popitem(last=False)
-            self.stats["evictions"] += 1
-        return lowered
 
     def __len__(self):
-        return len(self._cache)
+        return self.n_plans
 
 
-GLOBAL_CACHE = CompileCache()
-GLOBAL_PLAN_CACHE = LoweredPlanCache()
+class CompileCache(PlanStore):
+    """Legacy alias: executable level of a ``PlanStore``."""
+
+    def __init__(self, capacity: int = 128):
+        super().__init__(exec_capacity=capacity)
+        self.capacity = capacity
+
+    def get_or_build(self, key, build, example_args=None):
+        out = super().get_or_build(key, build, example_args)
+        # legacy contract: exec counters were 'hits'/'misses'/'evictions'
+        s = self.stats
+        s["hits"] = s["exec_hits"]
+        s["misses"] = s["exec_misses"]
+        s["evictions"] = s["exec_evictions"]
+        return out
+
+    def __len__(self):
+        return self.n_execs
+
+
+GLOBAL_CACHE = GLOBAL_STORE
+GLOBAL_PLAN_CACHE = GLOBAL_STORE

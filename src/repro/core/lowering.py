@@ -38,6 +38,7 @@ bucket pay the capture once per signature.
 """
 from __future__ import annotations
 
+import copy
 import dataclasses
 from collections import OrderedDict
 from typing import Any, Callable, Optional
@@ -47,14 +48,14 @@ from jax import lax
 
 from .analysis import BUF, AnalysisResult, static_analysis
 from .graph import FULL, OpGraph
-from .plan import ExecutionPlan, graph_fingerprint
+from .plan import ExecutionPlan, graph_fingerprint, structural_key
 
 
 class LoweringError(ValueError):
     """Plan / analysis / graph triple is inconsistent — refuse to lower."""
 
 
-@dataclasses.dataclass(frozen=True)
+@dataclasses.dataclass
 class Instr:
     """One pre-resolved plan step.
 
@@ -64,6 +65,11 @@ class Instr:
                  pad_cfg set => create the merge buffer via ``lax.pad``,
                  else ``dynamic_update_slice`` at the precomputed start.
     ``frees``  — env slots cleared after the step (death sites).
+
+    Not frozen: ``specialize`` re-derives instrs per shape bucket via
+    shallow copy + targeted field writes, which is measurably cheaper
+    than a frozen dataclass's object.__setattr__-per-field __init__ on
+    the PlanStore warm-up path.  Treat instances as immutable otherwise.
     """
 
     fn: Callable
@@ -99,8 +105,11 @@ class LoweredPlan:
     analysis: AnalysisResult
     stats: dict
     capture: bool = True               # jaxpr capture/replay of executions
+    struct_key: tuple = ()             # shape-free (graph, plan) identity
     _replays: OrderedDict = dataclasses.field(
         default_factory=OrderedDict, repr=False, compare=False)
+    _spec_cache: dict = dataclasses.field(
+        default_factory=dict, repr=False, compare=False)
 
     def __call__(self, params, inputs: dict) -> dict:
         if not self.capture:
@@ -361,6 +370,123 @@ def lower(graph: OpGraph, plan: ExecutionPlan,
         input_slots=tuple(input_slots), output_slots=tuple(output_slots),
         param_paths=tuple(path_ix), n_slots=n_slots, fingerprint=plan_fp,
         analysis=analysis, capture=capture,
+        struct_key=structural_key(graph, plan),
         stats={"n_slots": n_slots, "n_env_keys": n_keys,
                "slots_reused": reused, "pad_inits": pad_inits,
                "n_instrs": len(instrs)})
+
+
+def specialize(canonical: LoweredPlan, graph: OpGraph, plan: ExecutionPlan,
+               capture: Optional[bool] = None,
+               struct_key: Optional[tuple] = None) -> LoweredPlan:
+    """Re-derive a canonical lowering for a new shape bucket.
+
+    The cross-bucket share path: a prefill bucket re-traces the same layer
+    program at a different sequence length, so its (graph, plan) pair is
+    *structurally* identical to an already-lowered one — same nodes, same
+    step stream, same slots and death sites — and only the shape-dependent
+    pieces differ: slice ``(axis, offset, size)`` triples, merge-buffer
+    pad configs, and the op callables (closures re-traced with the new
+    shapes).  ``specialize`` rewrites exactly those from ``canonical``,
+    skipping static analysis and slot allocation entirely; everything
+    liveness-derived (slots, frees, param interning, input/output slot
+    maps) is reused verbatim.  This loop is the per-bucket warm-up cost,
+    so it stays allocation-light: unchanged read/write tuples are reused,
+    and ``Instr`` is rebuilt positionally (``dataclasses.replace`` is
+    several times slower and would erase the share-path speedup).
+
+    Raises ``LoweringError`` when the structural keys disagree — the
+    caller (``PlanStore``) then falls back to a full ``lower``.
+    ``struct_key``, when given, must be ``structural_key(graph, plan)``
+    already computed by the caller (the store computes it for its outer
+    key anyway; computing it twice would cost as much as the rewrite).
+    """
+    skey = struct_key or structural_key(graph, plan)
+    if canonical.struct_key != skey:
+        import hashlib
+
+        def _digest(k):
+            return hashlib.sha256(repr(k).encode()).hexdigest()[:16]
+        raise LoweringError(
+            f"cannot specialize: canonical lowering has structure "
+            f"{_digest(canonical.struct_key)}, new (graph, plan) has "
+            f"{_digest(skey)}")
+    plan_fp = plan.fingerprint()
+    ana = canonical.analysis
+    sizes = plan.split_sizes
+    tensors = graph.tensors
+    nodes = graph.nodes
+
+    offsets = []
+    acc = 0
+    for s in sizes:
+        offsets.append(acc)
+        acc += s
+
+    # which instrs carry shape-dependent reads/writes — and the op id each
+    # non-fused instr rebinds to — is itself structural: compute once per
+    # canonical, not once per bucket (the oids come from this call's plan,
+    # but the structural-key match guarantees they are bucket-invariant)
+    recipe = canonical._spec_cache.get("recipe")
+    if recipe is None:
+        recipe = tuple(
+            (any(sl is not None for _, sl in ins.reads),
+             any(b is not None for _, b in ins.writes),
+             -1 if ins.fused else step.handles[0].oid)
+            for ins, step in zip(canonical.instrs, plan.steps))
+        canonical._spec_cache["recipe"] = recipe
+
+    copy_ = copy.copy
+    instrs = []
+    for i, ins in enumerate(canonical.instrs):
+        dyn_r, dyn_w, oid = recipe[i]
+        new = copy_(ins)
+        if oid < 0:                       # fused: rebind kernel + step
+            step = plan.steps[i]
+            new.fn = step.replace_fn
+            new.step = step
+        else:
+            new.fn = nodes[oid].fn
+        if dyn_r:
+            rr = []
+            for (slot, sl), (t, p, _m, _k) in zip(ins.reads, ana.reads[i]):
+                if sl is not None:
+                    ref = tensors[t]
+                    sl = (ref.batch_dim, offsets[p], sizes[p])
+                rr.append((slot, sl))
+            new.reads = tuple(rr)
+        if dyn_w:
+            ww = []
+            for (slot, buf), (t, p) in zip(ins.writes, ana.writes[i]):
+                if buf is not None:
+                    bslot, _, pad_cfg, _ = buf
+                    ref = tensors[t]
+                    bd = ref.batch_dim
+                    if pad_cfg is not None:   # first producer: pad create
+                        cfg = tuple(
+                            (offsets[p], ref.shape[d] - offsets[p]
+                             - sizes[p], 0) if d == bd else (0, 0, 0)
+                            for d in range(len(ref.shape)))
+                        buf = (bslot, None, cfg, np.zeros((), ref.dtype))
+                    else:
+                        start = tuple(offsets[p] if d == bd else 0
+                                      for d in range(len(ref.shape)))
+                        buf = (bslot, start, None, None)
+                ww.append((slot, buf))
+            new.writes = tuple(ww)
+        instrs.append(new)
+
+    analysis = dataclasses.replace(
+        ana, plan_fingerprint=plan_fp,
+        buffer_bytes=sum(tensors[t].nbytes for t in ana.prealloc))
+    return LoweredPlan(
+        graph=graph, split_sizes=sizes, instrs=tuple(instrs),
+        input_slots=canonical.input_slots,
+        output_slots=canonical.output_slots,
+        param_paths=canonical.param_paths, n_slots=canonical.n_slots,
+        fingerprint=plan_fp, analysis=analysis,
+        capture=canonical.capture if capture is None else capture,
+        struct_key=skey,
+        stats={**{k: v for k, v in canonical.stats.items()
+                  if k not in ("captures", "replays")},
+               "specialized_from": canonical.fingerprint})

@@ -12,8 +12,10 @@ replaying them.
 from __future__ import annotations
 
 import dataclasses
+import functools
 import hashlib
-from typing import Callable, Optional, Sequence
+import weakref
+from typing import Callable, Optional
 
 from .graph import FULL, OpGraph
 
@@ -56,12 +58,21 @@ class ExecutionPlan:
         return len(self.split_sizes) if self.split_sizes else 1
 
     def fingerprint(self) -> str:
-        h = hashlib.sha256()
-        h.update(self.graph_fingerprint.encode())
-        h.update(repr(self.split_sizes).encode())
-        for s in self.steps:
-            h.update(repr(s).encode())
-        return h.hexdigest()[:16]
+        # memoized, and hashed off one C-repr'd tuple rather than a
+        # Python-level __repr__ walk per step: plans are immutable once
+        # finalized, and this sits on the PlanStore's per-bucket warm-up
+        # path (lower() alone needs it twice — directly and via Alg. 1)
+        fp = self.__dict__.get("_fp")
+        if fp is not None:
+            return fp
+        payload = (self.graph_fingerprint, self.split_sizes,
+                   tuple((s.kind,
+                          tuple((h.oid, h.mb, h.name) for h in s.handles),
+                          s.replace_name)
+                         for s in self.steps))
+        fp = self._fp = hashlib.sha256(
+            repr(payload).encode()).hexdigest()[:16]
+        return fp
 
     def pretty(self) -> str:
         lines = [f"split={list(self.split_sizes) or 'off'}"]
@@ -77,4 +88,105 @@ def graph_fingerprint(graph: OpGraph) -> str:
     for name, t in sorted(graph.inputs.items()):
         ref = graph.tensors[t]
         h.update(f"in:{name}:{ref.shape}:{ref.dtype}".encode())
+    return h.hexdigest()[:16]
+
+
+_PRIM = (str, int, float, bool, bytes, type(None))
+
+
+def _is_prim(v) -> bool:
+    return isinstance(v, _PRIM) or (
+        isinstance(v, tuple) and all(isinstance(x, _PRIM) for x in v))
+
+
+def fused_fn_identity(fn) -> tuple:
+    """Stable identity of a fused replacement kernel for the structural
+    key.
+
+    ``replace_name`` alone cannot disambiguate two schedulers of the same
+    class whose kernels close over different config (e.g.
+    ``partial(comet_fused, axis='model')`` vs ``axis='data'``): the step
+    streams are identical, so without this the PlanStore would replay the
+    first scheduler's lowering — with its closure baked into ``Instr.fn``
+    — for the second.  Resolution order:
+
+      * ``functools.partial`` over primitive args/kwargs -> the inner
+        fn's identity + those values (stable across builds: sharing
+        keeps working, different configs stop aliasing),
+      * plain function (no closure)                      -> module +
+        qualname,
+      * closure over primitive cells                     -> module +
+        qualname + cell values,
+      * anything opaque                                  -> ``id(fn)``:
+        never aliases, at the cost of never sharing (each build's fresh
+        closure is its own outer entry; the LRU reclaims them).
+    """
+    if isinstance(fn, functools.partial):
+        kw = tuple(sorted(fn.keywords.items())) if fn.keywords else ()
+        if all(_is_prim(v) for v in fn.args) and \
+                all(_is_prim(v) for _, v in kw):
+            return ("partial", fused_fn_identity(fn.func), fn.args, kw)
+        return ("id", id(fn))
+    qual = (getattr(fn, "__module__", ""), getattr(fn, "__qualname__", ""))
+    closure = getattr(fn, "__closure__", None)
+    if not closure:
+        if qual[1] and "<locals>" not in qual[1] and \
+                qual[1] != "<lambda>":
+            return ("fn",) + qual
+        return ("id", id(fn))
+    cells = []
+    for c in closure:
+        v = c.cell_contents
+        if not _is_prim(v):
+            return ("id", id(fn))
+        cells.append(v)
+    return ("closure",) + qual + (tuple(cells),)
+
+
+def structural_key(graph: OpGraph, plan: ExecutionPlan) -> tuple:
+    """Shape-free structural identity of a (graph, plan) pair, as a
+    hashable tuple.
+
+    Covers everything ``specialize`` (core/lowering.py) relies on being
+    identical between two lowerings — node wiring, param paths, batch-dim
+    placement, step kinds/handles, fused-kernel closure identity
+    (``fused_fn_identity``), micro-batch *count* — while excluding
+    everything it re-derives per shape bucket: tensor shapes, dtypes and
+    the concrete split sizes.  Two plans with equal structural keys lower
+    to the same slots, liveness and instruction stream; only slice
+    offsets and merge-buffer pads differ.
+
+    A raw tuple rather than a digest: this is computed on the PlanStore's
+    per-bucket warm-up path, where tuple construction + C-level hashing
+    is ~3x cheaper than hashing a serialized form.  ``structural_fingerprint``
+    wraps it into a printable digest for logs and docs.
+
+    Memoized per (plan, graph) — a plan is recorded against exactly one
+    graph, so store lookups that hit (the steady state) skip the walk;
+    the weakref guard re-walks if a different graph object is ever
+    passed with the same plan.
+    """
+    cached = plan.__dict__.get("_skey")
+    if cached is not None and cached[0]() is graph:
+        return cached[1]
+    nodes = tuple(
+        (n.name, n.inputs, n.outputs, n.resource, n.param_paths,
+         len(n.members))
+        for n in (graph.nodes[oid] for oid in graph.topo_order()))
+    bds = tuple(sorted((t, r.batch_dim) for t, r in graph.tensors.items()))
+    ins = tuple(sorted(graph.inputs.items()))
+    outs = tuple(sorted(graph.outputs.items()))
+    steps = tuple(
+        (s.kind, tuple((h.oid, h.mb) for h in s.handles), s.replace_name,
+         fused_fn_identity(s.replace_fn) if s.replace_fn is not None
+         else None)
+        for s in plan.steps)
+    key = (nodes, bds, ins, outs, len(plan.split_sizes), steps)
+    plan._skey = (weakref.ref(graph), key)
+    return key
+
+
+def structural_fingerprint(graph: OpGraph, plan: ExecutionPlan) -> str:
+    """Printable digest of ``structural_key`` (logs, error messages)."""
+    h = hashlib.sha256(repr(structural_key(graph, plan)).encode())
     return h.hexdigest()[:16]

@@ -1,0 +1,247 @@
+"""Unified PlanStore — the plan/capture cache behind cheap re-dispatch.
+
+DynaFlow's backend wins by amortizing scheduling work across many
+invocation shapes (the paper's CUDA-graph capture/replay, §3.3.2).  PR 1
+left that amortization split across two caches keyed per (model, mesh,
+bucket): a ``CompileCache`` of jitted executables and a
+``LoweredPlanCache`` of lowered plans, both keyed by the *shape-covering*
+v1 plan fingerprint — so every prefill bucket re-ran static analysis and
+lowering for what is structurally the same layer program.
+
+``PlanStore`` collapses the pair into one subsystem with a two-level
+plan cache:
+
+  * **outer key — fingerprint v2** (``outer_key``; printable digest via
+    ``fingerprint_v2``): the shape-free structural identity of the
+    (graph, plan) pair, combined with the strategy identity (the
+    caller's ``salt``) and the op-closure config (attention impl, shard
+    layout, dtype policy — everything the op callables close over that
+    the graph cannot see).
+  * **inner key — the shape bucket** (``bucket_key``): graph input
+    shapes/dtypes, concrete split sizes, capture flag.
+
+The first bucket of an outer entry pays the full ``lower`` (static
+analysis + slot allocation) and becomes the **canonical** lowering;
+every later bucket is derived from it via ``specialize`` — a single
+pass that rewrites slice offsets and merge-buffer pads — and is counted
+as a *share*, not a miss.
+
+Entries are LRU-bounded both by count and by an estimated byte budget;
+evictions, hits, misses and shares are all counted in ``stats``.  The
+executable level (``get_or_build``) keeps the old CompileCache contract
+under ``exec_*`` counters.
+"""
+from __future__ import annotations
+
+import time
+from collections import OrderedDict
+from typing import Callable, Optional
+
+import jax
+
+from .lowering import LoweredPlan, LoweringError, lower, specialize
+from .plan import structural_key
+
+
+def outer_key(graph, plan, salt: str = "", op_config=(),
+              struct_key_: Optional[tuple] = None) -> tuple:
+    """Fingerprint-v2 outer key: structure + strategy identity + op
+    closures, as a raw hashable tuple (the store's dict key — tuple
+    hashing is ~3x cheaper than a digest on the warm-up path).
+
+    ``op_config`` is a canonical tuple of (name, value) pairs describing
+    what the op callables close over — see ``LMBase.op_closure_config``.
+    ``struct_key_`` short-circuits the structural walk when the caller
+    already holds ``structural_key(graph, plan)``.
+    """
+    return (struct_key_ if struct_key_ is not None
+            else structural_key(graph, plan),
+            salt, tuple(sorted(tuple(op_config))))
+
+
+def fingerprint_v2(graph, plan, salt: str = "", op_config=()) -> str:
+    """Printable digest of the fingerprint-v2 outer key (logs, docs)."""
+    import hashlib
+    h = hashlib.sha256(repr(outer_key(graph, plan, salt, op_config))
+                       .encode())
+    return h.hexdigest()[:16]
+
+
+def bucket_key(graph, plan, capture: bool = True) -> tuple:
+    """Inner PlanStore key: the shape bucket of a (graph, plan) pair."""
+    shapes = tuple(
+        (name, graph.tensors[t].shape, str(graph.tensors[t].dtype))
+        for name, t in sorted(graph.inputs.items()))
+    return (shapes, tuple(plan.split_sizes), bool(capture))
+
+
+def plan_nbytes(lowered: LoweredPlan) -> int:
+    """Deterministic host-memory estimate of one lowered plan.
+
+    Not a profiler — a monotone proxy (instructions, slots, interned
+    paths) so the byte budget evicts big plans before small ones.
+    """
+    n = 512
+    for ins in lowered.instrs:
+        n += 256 + 48 * (len(ins.reads) + len(ins.writes) + len(ins.frees)
+                         + len(ins.fused_pairs)
+                         + len(ins.member_pairs or ()))
+    n += 64 * (lowered.n_slots + len(lowered.param_paths)
+               + len(lowered.input_slots) + len(lowered.output_slots))
+    return n
+
+
+class PlanStore:
+    """Two-level lowered-plan cache + executable cache, unified.
+
+    Plan level  — ``get_or_lower``: (fingerprint v2) -> (bucket) ->
+    ``LoweredPlan``; cross-bucket requests specialize the canonical
+    lowering instead of re-running analysis + lowering.
+
+    Exec level  — ``get_or_build``: arbitrary key -> jitted executable
+    (the runtime dispatcher's CUDA-graph-replay analogue).
+    """
+
+    def __init__(self, plan_capacity: int = 256,
+                 plan_budget_bytes: Optional[int] = None,
+                 exec_capacity: int = 128,
+                 capacity: Optional[int] = None):
+        # ``capacity`` kept for LoweredPlanCache call-site compatibility
+        self.plan_capacity = capacity if capacity is not None \
+            else plan_capacity
+        self.plan_budget_bytes = plan_budget_bytes
+        self.exec_capacity = exec_capacity
+        self._plans: OrderedDict = OrderedDict()   # (outer, inner) -> entry
+        self._canonical: dict = {}                 # outer -> (outer, inner)
+        self._execs: OrderedDict = OrderedDict()
+        self.stats = {
+            "hits": 0, "misses": 0, "shares": 0, "evictions": 0,
+            "lower_s": 0.0, "specialize_s": 0.0, "plan_bytes": 0,
+            "exec_hits": 0, "exec_misses": 0, "exec_evictions": 0,
+            "compile_s": 0.0, "trace_s": 0.0,
+        }
+
+    # -- plan level --------------------------------------------------------
+    def get_or_lower(self, graph, plan, analysis=None, salt: str = "",
+                     capture: bool = True, op_config=()) -> LoweredPlan:
+        skey = structural_key(graph, plan)
+        outer = outer_key(graph, plan, salt=salt, op_config=op_config,
+                          struct_key_=skey)
+        key = (outer, bucket_key(graph, plan, capture))
+        hit = self._plans.get(key)
+        if hit is not None:
+            self.stats["hits"] += 1
+            self._plans.move_to_end(key)
+            return hit[0]
+        canonical = self._canonical_plan(outer)
+        if canonical is not None:
+            t0 = time.perf_counter()
+            try:
+                lowered = specialize(canonical, graph, plan, capture=capture,
+                                     struct_key=skey)
+            except LoweringError:
+                lowered = None          # structure drifted: full lower below
+            if lowered is not None:
+                self.stats["specialize_s"] += time.perf_counter() - t0
+                self.stats["shares"] += 1
+                # a specialized plan has the canonical's instr structure,
+                # so its byte estimate is the canonical's — skip the walk
+                nbytes = self._plans[self._canonical[outer]][1]
+                self._insert(outer, key, lowered, nbytes)
+                return lowered
+        self.stats["misses"] += 1
+        t0 = time.perf_counter()
+        lowered = lower(graph, plan, analysis, capture=capture)
+        self.stats["lower_s"] += time.perf_counter() - t0
+        self._insert(outer, key, lowered)
+        return lowered
+
+    @property
+    def share_rate(self) -> float:
+        """Fraction of cold (non-hit) lookups served by specialization."""
+        cold = self.stats["shares"] + self.stats["misses"]
+        return self.stats["shares"] / cold if cold else 0.0
+
+    def _canonical_plan(self, outer) -> Optional[LoweredPlan]:
+        key = self._canonical.get(outer)
+        entry = self._plans.get(key) if key is not None else None
+        return entry[0] if entry is not None else None
+
+    def _insert(self, outer, key, lowered: LoweredPlan,
+                nbytes: Optional[int] = None):
+        if nbytes is None:
+            nbytes = plan_nbytes(lowered)
+        self._plans[key] = (lowered, nbytes)
+        self.stats["plan_bytes"] += nbytes
+        self._canonical.setdefault(outer, key)
+        self._evict_plans()
+
+    def _evict_plans(self):
+        while len(self._plans) > self.plan_capacity or (
+                self.plan_budget_bytes is not None
+                and self.stats["plan_bytes"] > self.plan_budget_bytes
+                and len(self._plans) > 1):
+            key, (_, nbytes) = self._plans.popitem(last=False)
+            self.stats["plan_bytes"] -= nbytes
+            self.stats["evictions"] += 1
+            outer = key[0]
+            if self._canonical.get(outer) == key:
+                # promote the most-recently-used surviving bucket of this
+                # outer entry (scan from the MRU end — the LRU end is next
+                # in line for eviction, which would re-trigger promotion
+                # on every pop under sustained pressure)
+                repl = next((k for k in reversed(self._plans)
+                             if k[0] == outer), None)
+                if repl is None:
+                    del self._canonical[outer]
+                else:
+                    self._canonical[outer] = repl
+
+    # -- executable level --------------------------------------------------
+    def key_for(self, plan_fp: str, inputs: dict) -> tuple:
+        shapes = tuple(sorted(
+            (k, tuple(v.shape), str(getattr(v, "dtype", type(v))))
+            for k, v in inputs.items()))
+        return (plan_fp, shapes)
+
+    def get_or_build(self, key, build: Callable[[], Callable],
+                     example_args: Optional[tuple] = None):
+        if key in self._execs:
+            self.stats["exec_hits"] += 1
+            self._execs.move_to_end(key)
+            return self._execs[key]
+        self.stats["exec_misses"] += 1
+        t0 = time.perf_counter()
+        fn = build()
+        self.stats["trace_s"] += time.perf_counter() - t0
+        if example_args is not None:
+            t0 = time.perf_counter()
+            fn = jax.jit(fn).lower(*example_args).compile()
+            self.stats["compile_s"] += time.perf_counter() - t0
+        self._execs[key] = fn
+        while len(self._execs) > self.exec_capacity:
+            self._execs.popitem(last=False)
+            self.stats["exec_evictions"] += 1
+        return fn
+
+    # -- introspection -----------------------------------------------------
+    @property
+    def n_plans(self) -> int:
+        return len(self._plans)
+
+    @property
+    def n_execs(self) -> int:
+        return len(self._execs)
+
+    def __len__(self):
+        return len(self._plans) + len(self._execs)
+
+    def snapshot(self) -> dict:
+        out = dict(self.stats)
+        out["n_plans"] = self.n_plans
+        out["n_execs"] = self.n_execs
+        out["share_rate"] = round(self.share_rate, 4)
+        return out
+
+
+GLOBAL_STORE = PlanStore()

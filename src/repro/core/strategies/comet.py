@@ -3,7 +3,6 @@ dispatch/GEMM/combine with chunked communication-computation overlap,
 dropped in via ``replace_func`` without forking the framework."""
 import functools
 
-from ..partition import Mark
 from ..scheduler import OpSchedulerBase
 from .fused import comet_fused
 

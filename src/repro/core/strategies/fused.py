@@ -7,7 +7,6 @@ mesh is bound), so lax collectives and Pallas kernels compose freely.
 """
 from __future__ import annotations
 
-import jax
 import jax.numpy as jnp
 from jax import lax
 

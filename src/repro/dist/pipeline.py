@@ -10,7 +10,6 @@ activation shape between stages), the usual pipeline contract.
 """
 from __future__ import annotations
 
-import jax
 import jax.numpy as jnp
 from jax import lax
 

@@ -15,7 +15,6 @@ from __future__ import annotations
 
 import random
 import time
-from typing import Optional
 
 import jax
 

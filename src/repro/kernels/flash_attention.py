@@ -37,7 +37,7 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, *, causal, sm_scale,
         hi = n_kb
 
     def body(kb, carry):
-        acc, m, l = carry
+        acc, m, lsum = carry
         k = pl.load(k_ref, (pl.ds(0, 1),
                             pl.ds(kb * block_k, block_k), slice(None)))[0]
         v = pl.load(v_ref, (pl.ds(0, 1),
@@ -52,15 +52,15 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, *, causal, sm_scale,
         m_new = jnp.maximum(m, jnp.max(s, axis=-1))
         p = jnp.exp(s - m_new[:, None])
         alpha = jnp.exp(m - m_new)
-        l_new = l * alpha + jnp.sum(p, axis=-1)
+        lsum_new = lsum * alpha + jnp.sum(p, axis=-1)
         acc = acc * alpha[:, None] + p @ v.astype(jnp.float32)
-        return acc, m_new, l_new
+        return acc, m_new, lsum_new
 
     acc0 = jnp.zeros((block_q, hd), jnp.float32)
     m0 = jnp.full((block_q,), NEG_INF, jnp.float32)
-    l0 = jnp.zeros((block_q,), jnp.float32)
-    acc, m, l = lax.fori_loop(0, hi, body, (acc0, m0, l0))
-    o_ref[...] = (acc / jnp.maximum(l, 1e-20)[:, None]).astype(
+    lsum0 = jnp.zeros((block_q,), jnp.float32)
+    acc, m, lsum = lax.fori_loop(0, hi, body, (acc0, m0, lsum0))
+    o_ref[...] = (acc / jnp.maximum(lsum, 1e-20)[:, None]).astype(
         o_ref.dtype)[None]
 
 

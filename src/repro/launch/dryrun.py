@@ -19,7 +19,6 @@ import time
 import traceback
 
 import jax
-import jax.numpy as jnp
 
 from ..configs import get_config, list_archs
 from ..configs.base import SHAPES
@@ -36,7 +35,6 @@ RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
 
 
 def skip_reason(cfg, shape_name: str):
-    shape = SHAPES[shape_name]
     if shape_name == "long_500k" and not cfg.subquadratic:
         return ("full-attention arch: 512k dense-KV decode is not "
                 "sub-quadratic-capable (DESIGN.md §Arch-applicability)")

@@ -14,11 +14,8 @@ lifted to global ShapeDtypeStructs + PartitionSpecs here:
 """
 from __future__ import annotations
 
-from typing import Optional
 
 import jax
-import jax.numpy as jnp
-import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 

@@ -7,19 +7,17 @@ Each builder returns ``(fn, in_sdss, in_shardings, arg_donate)`` where
 """
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
-from ..configs.base import ArchConfig, ShapeConfig
+from ..configs.base import ShapeConfig
 from ..core.scheduler import OpSchedulerBase, ScheduleContext
 from ..models.base import build_forward
 from ..train.step import TrainStepConfig, build_train_step
 from .mesh import mesh_shape_dict
-from .sharding import (global_batch_specs, global_param_specs,
-                       param_pspec_tree, shard_specs_of)
+from .sharding import global_batch_specs, global_param_specs, shard_specs_of
 
 
 def _dp_axes(mesh):
@@ -59,7 +57,8 @@ def build_global_train_step(model, scheduler: OpSchedulerBase,
                             shape: ShapeConfig, mesh,
                             tcfg: TrainStepConfig = None,
                             remat_policy: str = "full",
-                            lowered: bool = None):
+                            lowered: bool = None,
+                            plan_store=None):
     # lowered=None defers to tcfg (default True); an explicit bool wins
     tcfg = tcfg or TrainStepConfig(remat=True, remat_policy=remat_policy)
     if lowered is not None and lowered != tcfg.lowered:
@@ -69,7 +68,8 @@ def build_global_train_step(model, scheduler: OpSchedulerBase,
         model, "train", shape.seq_len, shape.global_batch, mesh)
     info = _sched_info(model.cfg.name, shape, B_loc, mesh)
     step, segs, _, init_opt = build_train_step(
-        model, scheduler, B_loc, shape.seq_len, tcfg, info)
+        model, scheduler, B_loc, shape.seq_len, tcfg, info,
+        plan_store=plan_store)
     p_sdss, p_shd = global_param_specs(model, segs, mesh)
     p_specs = shard_specs_of(p_shd)
     opt_sdss, opt_specs = _opt_specs(p_sdss, p_specs)
@@ -108,14 +108,21 @@ def _kv_collect_specs(out_env, mesh, replicated):
 
 def build_global_prefill_step(model, scheduler: OpSchedulerBase,
                               shape: ShapeConfig, mesh,
-                              lowered: bool = True):
+                              lowered: bool = True,
+                              plan_store=None):
+    """``plan_store``: a shared ``PlanStore`` — building several prefill
+    bucket steps against one store lowers each segment once and
+    specializes the rest (fingerprint v2 scopes entries by the model's
+    op-closure config, so one store may serve several meshes)."""
     batch_sdss, batch_shd, B_loc, repl = global_batch_specs(
         model, "prefill", shape.seq_len, shape.global_batch, mesh,
         s_max=shape.seq_len)
     info = _sched_info(model.cfg.name, shape, B_loc, mesh)
     segs, binputs = model.build_segments("prefill", B_loc, shape.seq_len,
                                          s_max=shape.seq_len)
-    fwd = build_forward(segs, scheduler, info, lowered=lowered)
+    fwd = build_forward(segs, scheduler, info, lowered=lowered,
+                        plan_cache=plan_store,
+                        op_config=model.op_closure_config())
     p_sdss, p_shd = global_param_specs(model, segs, mesh)
     p_specs = shard_specs_of(p_shd)
     batch_specs = shard_specs_of(batch_shd)
@@ -147,14 +154,17 @@ def build_global_prefill_step(model, scheduler: OpSchedulerBase,
 
 def build_global_decode_step(model, scheduler: OpSchedulerBase,
                              shape: ShapeConfig, mesh,
-                             lowered: bool = True):
+                             lowered: bool = True,
+                             plan_store=None):
     s_max = shape.seq_len
     batch_sdss, batch_shd, B_loc, repl = global_batch_specs(
         model, "decode", shape.seq_len, shape.global_batch, mesh,
         s_max=s_max)
     info = _sched_info(model.cfg.name, shape, B_loc, mesh)
     segs, binputs = model.build_segments("decode", B_loc, 1, s_max=s_max)
-    fwd = build_forward(segs, scheduler, info, lowered=lowered)
+    fwd = build_forward(segs, scheduler, info, lowered=lowered,
+                        plan_cache=plan_store,
+                        op_config=model.op_closure_config())
     p_sdss, p_shd = global_param_specs(model, segs, mesh)
     p_specs = shard_specs_of(p_shd)
     batch_specs = shard_specs_of(batch_shd)

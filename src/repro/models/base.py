@@ -15,16 +15,15 @@ Conventions
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Optional, Sequence
+from typing import Sequence
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 from jax import lax
 
-from ..configs.base import ArchConfig, ShapeConfig
-from ..core import (OpGraph, Realizer, partition, record_plan,
-                    ScheduleContext, sequential_plan, trace)
+from ..configs.base import ArchConfig
+from ..core import (OpGraph, Realizer, partition, record_plan, ScheduleContext,
+                    trace)
 from ..core.module import Module
 from ..core.scheduler import OpSchedulerBase
 from .layers import (AddOp, AllGatherOp, AttentionOp, DecodeAttentionOp,
@@ -134,18 +133,25 @@ def build_forward(segments: Sequence[Segment],
                   remat: bool = False,
                   remat_policy: str = "full",
                   lowered: bool = True,
-                  plan_cache=None) -> Forward:
+                  plan_cache=None,
+                  op_config=()) -> Forward:
     """Partition + schedule every segment graph, returning the Forward.
 
     ``lowered=True`` (default) compiles each segment plan to the slot-based
-    instruction stream.  Pass a ``LoweredPlanCache`` as ``plan_cache`` to
-    share lowered plans across builds (keyed by plan fingerprint + an
-    (arch, phase, scheduler, segment) salt): rebuilding the same
-    (segment, bucket) pair then skips static analysis and lowering
-    entirely.  The cache must be scoped to one (model, mesh) — plan
-    fingerprints see graph structure and shapes, not op closures, so a
-    process-global cache could alias structurally identical graphs with
-    different shard layouts (the serve engine keeps one per engine).
+    instruction stream.  Pass a ``PlanStore`` as ``plan_cache`` to share
+    lowered plans across builds: the store's outer key is fingerprint v2
+    (shape-free graph/plan structure + an (arch, phase, scheduler,
+    segment) salt + ``op_config``), the inner key is the shape bucket —
+    so rebuilding a known bucket is a hit, and a *new* bucket of a known
+    structure specializes the canonical lowering instead of re-running
+    static analysis and lowering (the cross-prefill-bucket share path).
+
+    ``op_config`` is the op-closure config (attention impl, shard layout,
+    dtype policy — ``LMBase.op_closure_config()``): everything the op
+    callables close over that neither the graph structure nor the shapes
+    can see.  Pass it whenever one store serves more than one (model,
+    mesh) so structurally identical graphs with different kernel or
+    sharding choices cannot alias.
     """
     salt = f"{info.arch}|{info.phase}|{type(scheduler).__name__}"
     realizers = {}
@@ -159,7 +165,8 @@ def build_forward(segments: Sequence[Segment],
         seg = dataclasses.replace(seg, graph=g)
         realizers[seg.key] = Realizer(g, plan, lowered=lowered,
                                       plan_cache=plan_cache,
-                                      plan_salt=f"{salt}|{seg.key}")
+                                      plan_salt=f"{salt}|{seg.key}",
+                                      op_config=op_config)
         segs.append(seg)
     return Forward(segs, realizers, remat=remat, remat_policy=remat_policy)
 
@@ -324,6 +331,23 @@ class LMBase:
         self.cfg = cfg
         self.mesh = mesh
 
+    def op_closure_config(self) -> tuple:
+        """Canonical (name, value) pairs for the PlanStore fingerprint-v2
+        outer key: everything this model's op callables close over that
+        graph structure and shapes cannot see — attention impl, shard
+        layout, dtype policy.  Two models whose graphs trace to the same
+        structure but differ in any of these must not share lowerings."""
+        m, c = self.mesh, self.cfg
+        return (("arch", c.name),
+                ("attn_impl", m.attn_impl),
+                ("tp", m.tp), ("dp", m.dp), ("pods", m.pods),
+                ("fsdp", m.fsdp), ("fsdp_resident", m.fsdp_resident),
+                ("seq_parallel", bool(getattr(c, "seq_parallel", False))),
+                ("act_dtype", "bfloat16"),
+                ("rope", c.rope), ("act", c.act),
+                ("tie_embeddings", bool(getattr(c, "tie_embeddings",
+                                                False))))
+
     # subclasses define these ------------------------------------------------
     def make_embed(self, phase: str) -> Module:
         raise NotImplementedError
@@ -402,7 +426,6 @@ class LMBase:
                     lay_in[cname] = csds
                     bd[cname] = 0
             # drop inputs the module doesn't take
-            import inspect
             sig = inspect.signature(mod.forward)
             lay_in = {k: v for k, v in lay_in.items() if k in sig.parameters}
             bd = {k: v for k, v in bd.items() if k in lay_in}

@@ -177,7 +177,6 @@ class HybridLM(LMBase):
     def decode_cache_env(self, B_loc, s_max):
         """env-key -> ShapeDtypeStruct for all decode caches (launch layer)."""
         out = {}
-        cfg = self.cfg
         m = self.cache_specs("mamba_g0", B_loc, s_max)
         for gi in range(self.n_groups):
             for k, v in m.items():

@@ -24,7 +24,7 @@ from __future__ import annotations
 import dataclasses
 import functools
 import math
-from typing import Optional, Sequence
+from typing import Optional
 
 import jax
 import jax.numpy as jnp

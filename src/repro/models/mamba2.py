@@ -14,19 +14,15 @@ ssm_state (B, H_loc, P, N) — O(1) per token, which is what makes
 """
 from __future__ import annotations
 
-import math
-from typing import Optional
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 from jax import lax
 
-from ..configs.base import ArchConfig, SSMConfig
-from ..core.module import Module, Op, Param
-from ..dist import collectives as col
-from .layers import (AddOp, LinearOp, make_param, MeshInfo, PsumOp,
-                     RMSNormOp, ShardedLinear)
+from ..configs.base import ArchConfig
+from ..core.module import Module, Op
+from .layers import (AddOp, make_param, MeshInfo, PsumOp, RMSNormOp,
+                     ShardedLinear)
 
 
 def ssm_dims(cfg: ArchConfig, tp: int):
@@ -45,7 +41,6 @@ class SSMInProj(Module):
 
     def __init__(self, cfg: ArchConfig, mesh: MeshInfo):
         super().__init__()
-        s = cfg.ssm
         d_in, d_in_loc, H, H_loc, ch_loc = ssm_dims(cfg, mesh.tp)
         out_loc = d_in_loc + ch_loc + H_loc  # z + xBC + dt
         self.proj = ShardedLinear(cfg.d_model, out_loc, "ssm_in", mesh)

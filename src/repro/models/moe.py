@@ -19,20 +19,18 @@ its whole dispatch→combine chain per-micro-batch (what DBO wants).
 from __future__ import annotations
 
 import math
-from typing import Optional
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 from jax import lax
 
 from ..configs.base import ArchConfig, MoEConfig
 from ..core.graph import VBATCH
-from ..core.module import Module, Op, Param, mark
+from ..core.module import Module, Op, mark
 from ..dist import collectives as col
-from .layers import (AddOp, AllGatherOp, AllToAllOp, HeadLayout, LinearOp,
-                     make_param, MeshInfo, MLPBlock, OProj, PsumOp, QKVProj,
-                     ReduceScatterOp, RMSNormOp, RopeOp, _sdpa)
+from .layers import (AddOp, AllGatherOp, HeadLayout, make_param, MeshInfo,
+                     MLPBlock, OProj, PsumOp, QKVProj, ReduceScatterOp,
+                     RMSNormOp, RopeOp)
 
 
 def moe_dims(m: MoEConfig, tp: int):

@@ -9,8 +9,8 @@ import jax
 import jax.numpy as jnp
 
 from ..configs.base import ArchConfig
-from .base import EmbedSegment, LMBase
-from .layers import AddOp, EmbedOp, MeshInfo, PsumOp, ReduceScatterOp
+from .base import EmbedSegment
+from .layers import AddOp, MeshInfo
 from .transformer import DenseLM
 
 

@@ -21,9 +21,9 @@ from ..configs.base import ArchConfig
 from ..core import trace
 from ..core.module import Module, Op
 from .base import LMBase, LogitsHead, Segment, TrainHead
-from .layers import (AddOp, AttentionOp, DecodeAttentionOp, EmbedOp, GELUOp,
+from .layers import (AddOp, AttentionOp, DecodeAttentionOp, EmbedOp,
                      HeadLayout, MeshInfo, MLPBlock, OProj, PsumOp, QKVProj,
-                     RMSNormOp, ShardedLinear, _QKVSplit)
+                     RMSNormOp, ShardedLinear)
 
 
 def _sinusoid(positions, d):

@@ -97,7 +97,9 @@ def adamw_update(params, grads, opt_state, cfg: AdamWConfig,
         v_out = quantize_state(v, cfg.block) if _is_quant(st["v"]) else v
         return newp.astype(p.dtype), {"m": m, "v": v_out}
 
-    is_state_leaf = lambda x: isinstance(x, dict) and "m" in x
+    def is_state_leaf(x):
+        return isinstance(x, dict) and "m" in x
+
     flat_p, tdef = jax.tree_util.tree_flatten(params)
     flat_g = jax.tree_util.tree_leaves(grads)
     flat_s = jax.tree_util.tree_leaves(

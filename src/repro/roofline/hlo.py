@@ -112,7 +112,6 @@ def _trip_count_of(instr: Instr, comps) -> int:
     if cond and cond.group(1) in comps:
         consts = {}
         for ins in comps[cond.group(1)].instrs:
-            mm = re.match(r"constant\((\d+)\)", ins.rest or "")
             if ins.op == "constant":
                 mc = re.search(r"constant\((\d+)\)", ins.line)
                 if mc:

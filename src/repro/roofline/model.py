@@ -18,7 +18,6 @@ useful-compute ratio MODEL_FLOPS / HLO_FLOPs.
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
 
 from .. import hw
 

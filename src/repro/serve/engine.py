@@ -2,10 +2,11 @@
 
 The runtime dispatcher half of the paper's §3.3.2 story: incoming prompts
 are rounded up to a shape bucket, the (plan, bucket) pair hits the
-compile cache (the CUDA-graph-capture analogue), and the scheduler's plan
-for that bucket is replayed.  Decode runs one static-shape step over the
-whole cache pool every iteration; requests claim/release rows (continuous
-batching).
+unified ``PlanStore`` (the CUDA-graph-capture analogue), and the
+scheduler's plan for that bucket is replayed.  The first bucket pays the
+full lowering; every further bucket shares it via fingerprint-v2
+specialization.  Decode runs one static-shape step over the whole cache
+pool every iteration; requests claim/release rows (continuous batching).
 
 The engine is single-host/mesh-free here (tp=1); the launch layer wraps
 the same step functions in shard_map for the production mesh.
@@ -20,7 +21,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ..core.compile_cache import CompileCache, LoweredPlanCache
+from ..core.plan_store import PlanStore
 from ..core.scheduler import OpSchedulerBase, ScheduleContext
 from ..models.base import build_forward
 from .kv_cache import KVCacheManager
@@ -47,6 +48,12 @@ class ServeConfig:
     prefill_buckets: tuple = (32, 64, 128, 256)
     greedy: bool = True
     lowered: bool = True               # slot-based lowered plan replay
+    # PlanStore budgets: bucketed serving churns through (shape, plan)
+    # pairs, so both cache levels are bounded — plans by an LRU byte
+    # budget, executables by entry count.
+    plan_capacity: int = 256
+    plan_budget_bytes: Optional[int] = 32 << 20
+    exec_capacity: int = 64
 
 
 class ServeEngine:
@@ -57,8 +64,10 @@ class ServeEngine:
         self.scheduler = scheduler
         self.cfg = cfg
         self.cache = KVCacheManager(model, cfg.max_batch, cfg.s_max)
-        self.compile_cache = CompileCache()
-        self.plan_cache = LoweredPlanCache() if cfg.lowered else None
+        self.store = PlanStore(plan_capacity=cfg.plan_capacity,
+                               plan_budget_bytes=cfg.plan_budget_bytes,
+                               exec_capacity=cfg.exec_capacity)
+        self._op_config = model.op_closure_config()
         self.waiting: list[Request] = []
         self.active: dict[int, Request] = {}     # row -> request
         self.finished: list[Request] = []
@@ -83,9 +92,7 @@ class ServeEngine:
     @property
     def stats(self):
         out = dict(self._stats)
-        out["compile_cache"] = dict(self.compile_cache.stats)
-        if self.plan_cache is not None:
-            out["plan_cache"] = dict(self.plan_cache.stats)
+        out["plan_store"] = self.store.snapshot()
         return out
 
     # -- prefill ----------------------------------------------------------
@@ -103,14 +110,16 @@ class ServeEngine:
                                    phase="prefill", arch=self.model.cfg.name)
             fwd = build_forward(segs, self.scheduler, info,
                                 lowered=self.cfg.lowered,
-                                plan_cache=self.plan_cache)
+                                plan_cache=self.store if self.cfg.lowered
+                                else None,
+                                op_config=self._op_config)
 
             def run(params, ids, positions):
                 return fwd(params, {"ids": ids, "positions": positions})
 
             return jax.jit(run)
 
-        return self.compile_cache.get_or_build(("prefill", bucket), build)
+        return self.store.get_or_build(("prefill", bucket), build)
 
     def _admit(self):
         while self.waiting and self.cache.free_rows:
@@ -163,7 +172,9 @@ class ServeEngine:
                                    arch=self.model.cfg.name)
             fwd = build_forward(segs, self.scheduler, info,
                                 lowered=self.cfg.lowered,
-                                plan_cache=self.plan_cache)
+                                plan_cache=self.store if self.cfg.lowered
+                                else None,
+                                op_config=self._op_config)
 
             def run(params, ids, positions, cache_len, caches):
                 batch = {"ids": ids, "positions": positions,
@@ -174,7 +185,7 @@ class ServeEngine:
 
             return jax.jit(run)
 
-        self._decode_fn = self.compile_cache.get_or_build(("decode",), build)
+        self._decode_fn = self.store.get_or_build(("decode",), build)
         return self._decode_fn
 
     def _decode_step(self):

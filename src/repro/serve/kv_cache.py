@@ -50,7 +50,6 @@ class KVCacheManager:
         for key, val in stacks.items():
             cache = self.caches[key]
             stacked = cache.ndim == val.ndim        # (L,B,S,...) vs (L,1,S,..)
-            S = val.shape[-3]
             if stacked:
                 cache = jax.lax.dynamic_update_slice(
                     cache, val.astype(cache.dtype),

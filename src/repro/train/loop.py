@@ -12,7 +12,6 @@ import dataclasses
 import time
 from typing import Callable, Optional
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 

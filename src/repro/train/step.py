@@ -15,7 +15,7 @@ collectives inside shard_map).  Gradient reduction rules:
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Optional
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -103,18 +103,25 @@ def global_grad_norm(grads, pspecs, mesh_info):
 
 def build_train_step(model, scheduler: OpSchedulerBase, B_loc: int, S: int,
                      cfg: TrainStepConfig,
-                     info: Optional[ScheduleContext] = None):
+                     info: Optional[ScheduleContext] = None,
+                     plan_store=None):
     """Returns (train_step, segments, binputs, init_opt).
 
     ``train_step(params, opt_state, batch, step) ->
         (params, opt_state, metrics)``.
+
+    ``plan_store``: optional shared ``PlanStore`` so rebuilding the step
+    (new seq-len bucket, restart after preemption) specializes the
+    already-lowered segment plans instead of re-running analysis+lowering.
     """
     segs, binputs = model.build_segments("train", B_loc, S)
     info = info or ScheduleContext(
         local_batch=B_loc, global_batch=B_loc, seq_len=S, phase="train",
         arch=model.cfg.name)
     fwd = build_forward(segs, scheduler, info, remat=cfg.remat,
-                        remat_policy=cfg.remat_policy, lowered=cfg.lowered)
+                        remat_policy=cfg.remat_policy, lowered=cfg.lowered,
+                        plan_cache=plan_store,
+                        op_config=model.op_closure_config())
     pspecs = model.param_pspecs(segs)
     sp_train = bool(getattr(model.cfg, "seq_parallel", False))
     mesh_info = model.mesh

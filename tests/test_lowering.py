@@ -14,10 +14,9 @@ import numpy as np
 import pytest
 from hypothesis import given, settings, strategies as st
 
-from repro.core import (FULL, LoweringError, OpSchedulerBase, Realizer,
-                        ScheduleContext, lower, realize, record_plan,
-                        static_analysis, trace)
-from repro.core.compile_cache import CompileCache, LoweredPlanCache
+from repro.core import (FULL, LoweringError, OpSchedulerBase, PlanStore,
+                        Realizer, ScheduleContext, lower, realize,
+                        record_plan, static_analysis, trace)
 from repro.core.module import Module, Op, Param
 from repro.core.plan import OpHandle
 
@@ -253,34 +252,34 @@ def test_lowering_rejects_mismatched_graph():
 # ---------------------------------------------------------------------------
 
 
-def test_lowered_plan_cache_lru_and_eviction_counter():
+def test_plan_store_lru_and_eviction_counter():
     g, params, x = _setup(0, 5)
-    cache = LoweredPlanCache(capacity=2)
+    store = PlanStore(plan_capacity=2)
     plans = [record_plan(g, RandomScheduler(s, (4, 4), 0.4),
                          ScheduleContext(local_batch=8)) for s in range(5)]
     fps = {p.fingerprint() for p in plans}
     assert len(fps) >= 3                     # distinct schedules
     for p in plans:
-        cache.get_or_lower(g, p)
-    assert len(cache) <= 2
-    assert cache.stats["evictions"] >= len(fps) - 2
+        store.get_or_lower(g, p)
+    assert store.n_plans <= 2
+    assert store.stats["evictions"] >= len(fps) - 2
     # hit path
-    lowered = cache.get_or_lower(g, plans[-1])
-    assert cache.stats["hits"] >= 1
+    lowered = store.get_or_lower(g, plans[-1])
+    assert store.stats["hits"] >= 1
     _assert_same(Realizer(g, plans[-1], lowered=False)(params, {"x": x}),
                  lowered(params, {"x": x}))
 
 
-def test_compile_cache_lru_and_eviction_counter():
-    cache = CompileCache(capacity=3)
+def test_plan_store_exec_lru_and_eviction_counter():
+    store = PlanStore(exec_capacity=3)
     for i in range(7):
-        cache.get_or_build(("k", i), lambda i=i: (lambda: i))
-    assert len(cache) == 3
-    assert cache.stats["evictions"] == 4
-    assert cache.stats["misses"] == 7
+        store.get_or_build(("k", i), lambda i=i: (lambda: i))
+    assert store.n_execs == 3
+    assert store.stats["exec_evictions"] == 4
+    assert store.stats["exec_misses"] == 7
     # most-recent keys survive
-    assert cache.get_or_build(("k", 6), lambda: None)() == 6
-    assert cache.stats["hits"] == 1
+    assert store.get_or_build(("k", 6), lambda: None)() == 6
+    assert store.stats["exec_hits"] == 1
 
 
 def test_capture_replay_reuses_jaxpr():

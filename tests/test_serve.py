@@ -77,7 +77,7 @@ def test_engine_matches_offline_greedy(engine_setup):
     assert got == want
 
 
-def test_compile_cache_reuse(engine_setup):
+def test_executable_cache_reuse(engine_setup):
     cfg, model, params = engine_setup
     eng = make_engine(model, params)
     rng = np.random.default_rng(1)
@@ -86,5 +86,27 @@ def test_compile_cache_reuse(engine_setup):
             0, 100, 10).astype(np.int32), max_new_tokens=4))
     eng.run()
     # one prefill build (one bucket) + one decode build; rest are hits
-    assert eng.compile_cache.stats["misses"] <= 2
-    assert eng.compile_cache.stats["hits"] >= 5
+    assert eng.store.stats["exec_misses"] <= 2
+    assert eng.store.stats["exec_hits"] >= 5
+
+
+def test_cross_bucket_plan_share(engine_setup):
+    """Second prefill bucket must not re-lower: its segment plans are
+    structurally identical to the first bucket's, so the PlanStore serves
+    them via fingerprint-v2 specialization (counted as shares)."""
+    cfg, model, params = engine_setup
+    eng = make_engine(model, params)
+    rng = np.random.default_rng(2)
+    eng.submit(Request(rid=0, prompt=rng.integers(0, 100, 10)
+                       .astype(np.int32), max_new_tokens=3))   # bucket 16
+    eng.submit(Request(rid=1, prompt=rng.integers(0, 100, 20)
+                       .astype(np.int32), max_new_tokens=3))   # bucket 32
+    done = eng.run()
+    assert len(done) == 2
+    st = eng.store.stats
+    # bucket 1 (+ the decode build) pays the lowering; bucket 2 shares all
+    # of its segment plans off bucket 1's canonical lowerings
+    assert st["shares"] >= 3, st
+    assert eng.store.share_rate > 0
+    # eviction stats surface through engine metrics
+    assert "evictions" in eng.stats["plan_store"]
