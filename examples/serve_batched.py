@@ -2,11 +2,16 @@
 
 Serves a (smoke-sized) chatglm3 with bucketed prefill, continuous-batching
 decode, and the dynamic scheduler choosing per-bucket plans — the paper's
-deployment story in miniature.
+deployment story in miniature.  Afterwards the server is "restarted": a
+second engine warm-starts from the persisted PlanStore and serves its
+first request without re-lowering a single plan (restore hits + shares
+only — the cross-process half of the capture/replay story).
 
 Run:  PYTHONPATH=src python examples/serve_batched.py [--requests 24]
 """
 import argparse
+import os
+import tempfile
 import time
 
 import jax
@@ -25,6 +30,8 @@ def main():
     ap.add_argument("--requests", type=int, default=24)
     ap.add_argument("--max-new", type=int, default=12)
     ap.add_argument("--strategy", default="dynamic")
+    ap.add_argument("--plan-store", default=None,
+                    help="persist lowered plans here (default: a temp file)")
     args = ap.parse_args()
 
     cfg = get_smoke_config(args.arch)
@@ -32,9 +39,12 @@ def main():
     segs, _ = model.build_segments("prefill", 1, 32, s_max=128)
     params = model._init_from_segments(segs, jax.random.PRNGKey(0))
 
-    eng = ServeEngine(model, params, get_strategy(args.strategy),
-                      ServeConfig(max_batch=8, s_max=128,
-                                  prefill_buckets=(16, 32, 64)))
+    store_path = args.plan_store or os.path.join(
+        tempfile.mkdtemp(prefix="dynaflow-"), "plan_store.dfps")
+    serve_cfg = ServeConfig(max_batch=8, s_max=128,
+                            prefill_buckets=(16, 32, 64),
+                            plan_store_path=store_path)
+    eng = ServeEngine(model, params, get_strategy(args.strategy), serve_cfg)
     rng = np.random.default_rng(0)
     t0 = time.perf_counter()
     for i in range(args.requests):
@@ -58,6 +68,28 @@ def main():
           f"{ps['misses']} lowered, {ps['shares']} shared across buckets "
           f"(share rate {ps['share_rate']:.0%})")
     assert all(len(r.output) == args.max_new for r in done)
+    eng.shutdown()
+
+    # -- "restart" the server: warm-start from the persisted PlanStore ----
+    # A fresh engine (fresh process in production) restores the canonical
+    # lowerings and serves its first request with zero lower() calls.
+    print(f"\nrestarting from {store_path} "
+          f"({os.path.getsize(store_path)} bytes)...")
+    eng2 = ServeEngine(model, params, get_strategy(args.strategy),
+                       serve_cfg)
+    t0 = time.perf_counter()
+    eng2.submit(Request(rid=10_000,
+                        prompt=rng.integers(0, cfg.vocab, 20,
+                                            dtype=np.int32),
+                        max_new_tokens=4))
+    eng2.run()
+    dt = time.perf_counter() - t0
+    ps2 = eng2.store.snapshot()
+    print(f"first request after restart: {dt*1e3:.0f}ms; "
+          f"{ps2['restore_hits']} restored lowerings, {ps2['shares']} "
+          f"shared, {ps2['misses']} cold lowers")
+    assert ps2["misses"] == 0, (
+        f"warm-started engine re-lowered {ps2['misses']} plans: {ps2}")
     print("serve_batched OK")
 
 

@@ -1,7 +1,7 @@
 """Architecture config registry.  ``get_config(arch_id)`` returns the exact
 published config; ``get_smoke_config(arch_id)`` a reduced same-family config
 for CPU smoke tests."""
-from .base import ArchConfig, MoEConfig, SSMConfig, ShapeConfig, SHAPES
+from .base import SHAPES, ArchConfig, MoEConfig, ShapeConfig, SSMConfig
 
 _REGISTRY = {}
 

@@ -9,32 +9,35 @@ Public API:
   static_analysis / Realizer / realize            — backend (Alg. 1)
   lower / LoweredPlan / specialize                — plan IR + capture/replay
   PlanStore / fingerprint_v2                      — unified plan/exec cache
+  RestoreError / FINGERPRINT_VERSION              — persisted-store contract
   sequential_plan                                 — reference fallback
 """
-from .graph import FULL, OpGraph, OpNode, TensorRef
-from .module import FnOp, Module, Op, Param, mark, trace
-from .partition import Mark, SplitEveryOp, SplitFunc, SplitModule, partition
-from .plan import (ExecutionPlan, OpHandle, PlanStep, graph_fingerprint,
-                   structural_fingerprint)
-from .scheduler import (OpSchedulerBase, SchedCtx, ScheduleContext,
-                        record_plan)
 from .analysis import AnalysisResult, static_analysis
 from .backend import FusedCallInfo, Realizer, realize, sequential_plan
-from .lowering import LoweredPlan, LoweringError, lower, specialize
-from .plan_store import GLOBAL_STORE, PlanStore, fingerprint_v2
 from .compile_cache import (GLOBAL_CACHE, GLOBAL_PLAN_CACHE, CompileCache,
                             LoweredPlanCache)
+from .graph import FULL, OpGraph, OpNode, TensorRef
+from .lowering import LoweredPlan, LoweringError, lower, specialize
+from .module import FnOp, Module, Op, Param, mark, trace
+from .partition import Mark, SplitEveryOp, SplitFunc, SplitModule, partition
+from .plan import (FINGERPRINT_VERSION, ExecutionPlan, OpHandle, PlanStep,
+                   graph_fingerprint, structural_fingerprint)
+from .plan_serde import FORMAT_VERSION, RestoreError
+from .plan_store import GLOBAL_STORE, PlanStore, fingerprint_v2
+from .scheduler import (OpSchedulerBase, SchedCtx, ScheduleContext,
+                        record_plan)
 
 __all__ = [
     "FULL", "OpGraph", "OpNode", "TensorRef",
     "FnOp", "Module", "Op", "Param", "mark", "trace",
     "Mark", "SplitEveryOp", "SplitFunc", "SplitModule", "partition",
     "ExecutionPlan", "OpHandle", "PlanStep", "graph_fingerprint",
-    "structural_fingerprint",
+    "structural_fingerprint", "FINGERPRINT_VERSION",
     "OpSchedulerBase", "SchedCtx", "ScheduleContext", "record_plan",
     "AnalysisResult", "static_analysis",
     "FusedCallInfo", "Realizer", "realize", "sequential_plan",
     "LoweredPlan", "LoweringError", "lower", "specialize",
     "GLOBAL_STORE", "PlanStore", "fingerprint_v2",
+    "FORMAT_VERSION", "RestoreError",
     "GLOBAL_CACHE", "GLOBAL_PLAN_CACHE", "CompileCache", "LoweredPlanCache",
 ]

@@ -19,6 +19,13 @@ from typing import Callable, Optional
 
 from .graph import FULL, OpGraph
 
+# Version of the structural-key / outer-key schema ("fingerprint v2").
+# Bump whenever ``structural_key`` / ``fused_fn_identity`` / ``outer_key``
+# change shape: persisted PlanStore files embed it and refuse to restore
+# across versions (core/plan_serde.py), and CI keys its warm-start cache
+# on it so stale artifacts are never replayed.
+FINGERPRINT_VERSION = 2
+
 
 @dataclasses.dataclass(frozen=True)
 class OpHandle:

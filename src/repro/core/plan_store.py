@@ -26,10 +26,29 @@ every later bucket is derived from it via ``specialize`` — a single
 pass that rewrites slice offsets and merge-buffer pads — and is counted
 as a *share*, not a miss.
 
+**Persistence.**  Because fingerprint v2 is shape-free and closure-aware,
+a lowering is a reusable artifact *across processes*: ``save()``
+serializes every persistable entry (``core.plan_serde`` — instruction
+tuples, slots, liveness, interned param paths, merge-pad metadata;
+callables and jaxpr captures excluded), and ``load()`` /
+``PlanStore.open()`` restore them lazily.  A restored bucket is
+*redeemed* on first request — callables rebound from the caller's live
+(graph, plan), counted as a ``restore_hit`` — and an unseen bucket of a
+restored entry specializes a rehydrated canonical skeleton instead of
+re-lowering.  A warm-started process therefore serves every
+previously-seen bucket without a single ``lower`` call.  Corrupt or
+version-mismatched files degrade to cold lowering, counted under the
+``restore_*`` stats family.
+
+**Admission policy.**  Eviction stats feed persistence: a bucket evicted
+before a second touch is recorded as *one-shot* and never re-admitted to
+the on-disk artifact (the record itself is persisted in the file
+header), keeping the store bounded under bucket churn.
+
 Entries are LRU-bounded both by count and by an estimated byte budget;
 evictions, hits, misses and shares are all counted in ``stats``.  The
 executable level (``get_or_build``) keeps the old CompileCache contract
-under ``exec_*`` counters.
+under ``exec_*`` counters, with its own entry-count and byte budgets.
 """
 from __future__ import annotations
 
@@ -40,7 +59,15 @@ from typing import Callable, Optional
 import jax
 
 from .lowering import LoweredPlan, LoweringError, lower, specialize
-from .plan import structural_key
+from .plan import FINGERPRINT_VERSION, structural_key
+from .plan_serde import (FORMAT_VERSION, RestoreError, encode_analysis,
+                         encode_lowered, entry_line, key_digest,
+                         parse_payload, persistable_key, read_store,
+                         rehydrate, split_entry_line, write_store)
+
+_ONE_SHOT_CAP = 4096          # bounded one-shot eviction record
+_PASSTHROUGH_CAP = 1024       # max never-redeemed entries kept per save
+_EXEC_DEFAULT_NBYTES = 1 << 12  # floor estimate for un-analyzable execs
 
 
 def outer_key(graph, plan, salt: str = "", op_config=(),
@@ -60,11 +87,9 @@ def outer_key(graph, plan, salt: str = "", op_config=(),
 
 
 def fingerprint_v2(graph, plan, salt: str = "", op_config=()) -> str:
-    """Printable digest of the fingerprint-v2 outer key (logs, docs)."""
-    import hashlib
-    h = hashlib.sha256(repr(outer_key(graph, plan, salt, op_config))
-                       .encode())
-    return h.hexdigest()[:16]
+    """Printable digest of the fingerprint-v2 outer key (logs, docs,
+    and the per-entry header of the persisted store)."""
+    return key_digest(outer_key(graph, plan, salt, op_config))
 
 
 def bucket_key(graph, plan, capture: bool = True) -> tuple:
@@ -96,7 +121,8 @@ class PlanStore:
 
     Plan level  — ``get_or_lower``: (fingerprint v2) -> (bucket) ->
     ``LoweredPlan``; cross-bucket requests specialize the canonical
-    lowering instead of re-running analysis + lowering.
+    lowering instead of re-running analysis + lowering; cross-process
+    requests redeem entries restored from a persisted store file.
 
     Exec level  — ``get_or_build``: arbitrary key -> jitted executable
     (the runtime dispatcher's CUDA-graph-replay analogue).
@@ -105,20 +131,37 @@ class PlanStore:
     def __init__(self, plan_capacity: int = 256,
                  plan_budget_bytes: Optional[int] = None,
                  exec_capacity: int = 128,
-                 capacity: Optional[int] = None):
+                 exec_budget_bytes: Optional[int] = None,
+                 capacity: Optional[int] = None,
+                 path: Optional[str] = None):
         # ``capacity`` kept for LoweredPlanCache call-site compatibility
         self.plan_capacity = capacity if capacity is not None \
             else plan_capacity
         self.plan_budget_bytes = plan_budget_bytes
         self.exec_capacity = exec_capacity
+        self.exec_budget_bytes = exec_budget_bytes
+        self.path = path
         self._plans: OrderedDict = OrderedDict()   # (outer, inner) -> entry
         self._canonical: dict = {}                 # outer -> (outer, inner)
-        self._execs: OrderedDict = OrderedDict()
+        self._execs: OrderedDict = OrderedDict()   # key -> (fn, nbytes)
+        self._touches: dict = {}                   # plan key -> reuse count
+        self._one_shot: OrderedDict = OrderedDict()  # (odig, bdig) -> None
+        # restored-but-unredeemed state: verbatim entry lines by fp2
+        # digest (checksum-verified at load, JSON parse deferred to
+        # first use) and parsed entries by outer key
+        self._restored_raw: dict = {}
+        self._restored_parsed: dict = {}
+        self._dirty = False                        # plan-level state vs disk
         self.stats = {
             "hits": 0, "misses": 0, "shares": 0, "evictions": 0,
             "lower_s": 0.0, "specialize_s": 0.0, "plan_bytes": 0,
+            "one_shot_evictions": 0,
+            "restore_hits": 0, "restore_canonicals": 0,
+            "restore_entries": 0, "restore_rejected": 0,
+            "restore_errors": 0, "restore_saved": 0, "restore_skipped": 0,
+            "restore_s": 0.0,
             "exec_hits": 0, "exec_misses": 0, "exec_evictions": 0,
-            "compile_s": 0.0, "trace_s": 0.0,
+            "exec_bytes": 0, "compile_s": 0.0, "trace_s": 0.0,
         }
 
     # -- plan level --------------------------------------------------------
@@ -131,9 +174,27 @@ class PlanStore:
         hit = self._plans.get(key)
         if hit is not None:
             self.stats["hits"] += 1
+            self._touches[key] = self._touches.get(key, 0) + 1
             self._plans.move_to_end(key)
             return hit[0]
+        restored = self._restored_entry(outer) \
+            if (self._restored_raw or self._restored_parsed) else None
+        if restored is not None:
+            # the record is kept after a successful redeem: it serves
+            # again if LRU churn evicts the live entry, and save()'s
+            # pass-through re-persists it (a short-lived or
+            # budget-squeezed process must never shrink the artifact)
+            rec = restored["buckets"].get(key[1])
+            if rec is not None:
+                lowered = self._redeem(rec, restored, graph, plan, skey,
+                                       outer, key)
+                if lowered is not None:
+                    return lowered
+                restored["buckets"].pop(key[1], None)   # rejected: no retry
         canonical = self._canonical_plan(outer)
+        if canonical is None and restored is not None:
+            canonical = self._skeleton_canonical(restored, outer, graph,
+                                                 plan, skey)
         if canonical is not None:
             t0 = time.perf_counter()
             try:
@@ -146,7 +207,15 @@ class PlanStore:
                 self.stats["shares"] += 1
                 # a specialized plan has the canonical's instr structure,
                 # so its byte estimate is the canonical's — skip the walk
-                nbytes = self._plans[self._canonical[outer]][1]
+                # (unless the canonical is a restored skeleton not held
+                # in the live table)
+                nbytes = None
+                ck = self._canonical.get(outer)
+                if ck is not None:
+                    entry = self._plans.get(ck)
+                    if entry is not None:
+                        nbytes = entry[1]
+                        self._touches[ck] = self._touches.get(ck, 0) + 1
                 self._insert(outer, key, lowered, nbytes)
                 return lowered
         self.stats["misses"] += 1
@@ -172,8 +241,10 @@ class PlanStore:
         if nbytes is None:
             nbytes = plan_nbytes(lowered)
         self._plans[key] = (lowered, nbytes)
+        self._touches.setdefault(key, 0)
         self.stats["plan_bytes"] += nbytes
         self._canonical.setdefault(outer, key)
+        self._dirty = True
         self._evict_plans()
 
     def _evict_plans(self):
@@ -184,6 +255,14 @@ class PlanStore:
             key, (_, nbytes) = self._plans.popitem(last=False)
             self.stats["plan_bytes"] -= nbytes
             self.stats["evictions"] += 1
+            if self._touches.pop(key, 0) == 0:
+                # evicted before a second touch: a one-shot bucket.  The
+                # admission policy bars it from the persisted artifact.
+                self.stats["one_shot_evictions"] += 1
+                self._one_shot[(key_digest(key[0]),
+                                key_digest(key[1]))] = None
+                while len(self._one_shot) > _ONE_SHOT_CAP:
+                    self._one_shot.popitem(last=False)
             outer = key[0]
             if self._canonical.get(outer) == key:
                 # promote the most-recently-used surviving bucket of this
@@ -197,32 +276,253 @@ class PlanStore:
                 else:
                     self._canonical[outer] = repl
 
+    # -- persistence -------------------------------------------------------
+    @classmethod
+    def open(cls, path: str, **kwargs) -> "PlanStore":
+        """Construct a store bound to ``path``, warm-starting from it when
+        the file exists (missing file = empty store, not an error).
+        ``save()`` with no argument writes back to the same path."""
+        store = cls(path=path, **kwargs)
+        import os
+        if os.path.exists(path):
+            store.load(path)
+        return store
+
+    def load(self, path: Optional[str] = None) -> int:
+        """Restore persisted entries from ``path`` (default: the bound
+        path).  Returns the number of restorable outer entries staged.
+
+        Entries are staged lazily: the load pass verifies the header and
+        per-entry checksums only; JSON parsing and callable rebinding
+        happen on first request (*redeem*).  A corrupt or
+        version-mismatched file rejects wholesale (``restore_errors``);
+        a corrupt entry rejects alone (``restore_rejected``) — either
+        way requests degrade to a cold ``lower``.
+        """
+        path = path or self.path
+        if path is None:
+            raise ValueError("PlanStore.load: no path given or bound")
+        try:
+            one_shot, lines = read_store(
+                path, fingerprint_version=FINGERPRINT_VERSION)
+        except RestoreError:
+            self.stats["restore_errors"] += 1
+            return 0
+        for dig in one_shot:
+            self._one_shot.setdefault(dig, None)
+        n = 0
+        for line in lines:
+            try:
+                fp2, _payload = split_entry_line(line)
+            except RestoreError:
+                self.stats["restore_rejected"] += 1
+                continue
+            self._restored_raw[fp2] = line
+            n += 1
+        self.stats["restore_entries"] += n
+        return n
+
+    def save(self, path: Optional[str] = None) -> int:
+        """Atomically persist the canonical lowerings to ``path``
+        (default: the bound path).  Returns the number of outer entries
+        written.
+
+        Only **canonical** buckets are serialized: every derived bucket
+        is one cheap ``specialize`` away at restore time, so persisting
+        it would grow the artifact without shrinking the warm path.
+        Excluded entirely: entries whose outer key carries a
+        process-local closure identity (they could never match after a
+        restart) and canonicals recorded one-shot by the admission
+        policy.  Restored-but-unredeemed entries pass through, so
+        short-lived processes do not shrink the artifact.
+        """
+        path = path or self.path
+        if path is None:
+            raise ValueError("PlanStore.save: no path given or bound")
+        lines = []
+        covered = set()
+        skipped = 0
+        for outer, ckey in self._canonical.items():
+            entry = self._plans.get(ckey)
+            if entry is None:
+                continue
+            bkey = ckey[1]
+            if not (persistable_key(outer) and persistable_key(bkey)):
+                skipped += 1
+                continue
+            odig = key_digest(outer)
+            if (odig, key_digest(bkey)) in self._one_shot:
+                skipped += 1
+                continue
+            lowered = entry[0]
+            lines.append(entry_line(
+                outer, encode_analysis(lowered.analysis), bkey,
+                [encode_lowered(bkey, lowered)], fp2=odig))
+            covered.add(odig)
+        # entries parsed but not superseded by a live canonical pass
+        # through (their canonical bucket was never redeemed here)
+        for outer, parsed in self._restored_parsed.items():
+            if parsed["fp2"] in covered or not parsed["buckets"]:
+                continue
+            rec = parsed["buckets"].get(parsed["canonical"]) \
+                or next(iter(parsed["buckets"].values()))
+            lines.append(entry_line(outer, parsed["analysis"],
+                                    rec["bucket"], [rec],
+                                    fp2=parsed["fp2"]))
+            covered.add(parsed["fp2"])
+        # raw entries never touched this process pass through verbatim
+        # (checksums were verified at load — no re-hash), capped so a
+        # store relayed across many generations cannot accumulate stale
+        # entries without bound
+        passthrough = sorted(fp2 for fp2 in self._restored_raw
+                             if fp2 not in covered)
+        skipped += max(0, len(passthrough) - _PASSTHROUGH_CAP)
+        for fp2 in passthrough[:_PASSTHROUGH_CAP]:
+            lines.append(self._restored_raw[fp2])
+        n = write_store(path, lines, one_shot=self._one_shot,
+                        fingerprint_version=FINGERPRINT_VERSION)
+        self.stats["restore_saved"] = n
+        self.stats["restore_skipped"] += skipped
+        if path == self.path:
+            self._dirty = False
+        return n
+
+    @property
+    def dirty(self) -> bool:
+        """True when plan-level state changed since the last ``save()``
+        to the bound path — lets periodic checkpoints (serve idle loop)
+        skip rewriting an unchanged artifact."""
+        return self._dirty
+
+    def _restored_entry(self, outer) -> Optional[dict]:
+        parsed = self._restored_parsed.get(outer)
+        if parsed is not None:
+            return parsed
+        if not self._restored_raw:
+            return None
+        raw = self._restored_raw.pop(key_digest(outer), None)
+        if raw is None:
+            return None
+        try:
+            payload = parse_payload(raw.split(" ", 4)[4])
+            # entries are digest-addressed; the salt rides along as a
+            # cheap cross-check (full safety comes from rehydrate's
+            # plan-fingerprint verification)
+            if payload["salt"] != outer[1]:
+                raise RestoreError("entry digest does not match its key")
+        except RestoreError:
+            self.stats["restore_rejected"] += 1
+            return None
+        parsed = {"fp2": key_digest(outer),
+                  "analysis": payload["analysis"],
+                  "canonical": payload["canonical"],
+                  "buckets": {rec["bucket"]: rec
+                              for rec in payload["buckets"]
+                              if isinstance(rec, dict) and "bucket" in rec}}
+        self._restored_parsed[outer] = parsed
+        return parsed
+
+    def _redeem(self, rec, restored, graph, plan, skey, outer,
+                key) -> Optional[LoweredPlan]:
+        """Exact-bucket restore: rebind callables from the live (graph,
+        plan) and admit the result as a live entry — zero ``lower`` and
+        zero ``specialize`` cost."""
+        t0 = time.perf_counter()
+        try:
+            lowered = rehydrate(rec, restored["analysis"], graph, plan,
+                                struct_key=skey)
+        except RestoreError:
+            self.stats["restore_rejected"] += 1
+            return None
+        self.stats["restore_s"] += time.perf_counter() - t0
+        self.stats["restore_hits"] += 1
+        self._insert(outer, key, lowered)
+        # a cross-generation reuse is by definition not one-shot
+        self._touches[key] = self._touches.get(key, 0) + 1
+        return lowered
+
+    def _skeleton_canonical(self, restored, outer, graph, plan,
+                            skey) -> Optional[LoweredPlan]:
+        """Rehydrate the restored entry's canonical bucket as a fn-less
+        skeleton for ``specialize`` to derive *unseen* buckets from.
+        ``specialize`` rebinds every callable and rewrites every
+        shape-dependent field, so the skeleton's dangling fns and stale
+        offsets are never observable.  No memo: whatever follows this
+        call — a successful specialize or a cold lower — installs a real
+        canonical via ``_insert``, so the skeleton path runs at most
+        once per outer entry."""
+        rec = restored["buckets"].get(restored["canonical"])
+        if rec is None and restored["buckets"]:
+            rec = next(iter(restored["buckets"].values()))
+        if rec is None:
+            return None
+        try:
+            skel = rehydrate(rec, restored["analysis"], graph, plan,
+                             struct_key=skey, bind_fns=False)
+        except RestoreError:
+            self.stats["restore_rejected"] += 1
+            return None
+        self.stats["restore_canonicals"] += 1
+        return skel
+
     # -- executable level --------------------------------------------------
     def key_for(self, plan_fp: str, inputs: dict) -> tuple:
-        shapes = tuple(sorted(
-            (k, tuple(v.shape), str(getattr(v, "dtype", type(v))))
-            for k, v in inputs.items()))
-        return (plan_fp, shapes)
+        """Executable cache key over a plan fingerprint + example inputs.
+
+        Accepts arrays (anything with ``.shape``/``.dtype``) keyed
+        structurally and plain Python scalars keyed by type + value
+        (they are static under jit, so the value belongs in the key).
+        Anything else raises — a silently id-keyed object would make
+        every lookup a miss and every stale hit a wrong executable.
+        """
+        items = []
+        for k, v in sorted(inputs.items()):
+            if hasattr(v, "shape") and hasattr(v, "dtype"):
+                items.append((k, tuple(v.shape), str(v.dtype)))
+            elif isinstance(v, (bool, int, float, str, bytes, type(None))):
+                items.append((k, "py", type(v).__name__, v))
+            else:
+                raise TypeError(
+                    f"PlanStore.key_for: input {k!r} is neither an array "
+                    f"nor a static Python scalar (got {type(v).__name__}); "
+                    "it cannot form a stable executable key")
+        return (plan_fp, tuple(items))
 
     def get_or_build(self, key, build: Callable[[], Callable],
                      example_args: Optional[tuple] = None):
-        if key in self._execs:
+        hit = self._execs.get(key)
+        if hit is not None:
             self.stats["exec_hits"] += 1
             self._execs.move_to_end(key)
-            return self._execs[key]
+            return hit[0]
         self.stats["exec_misses"] += 1
         t0 = time.perf_counter()
         fn = build()
         self.stats["trace_s"] += time.perf_counter() - t0
+        nbytes = 0
         if example_args is not None:
             t0 = time.perf_counter()
             fn = jax.jit(fn).lower(*example_args).compile()
             self.stats["compile_s"] += time.perf_counter() - t0
-        self._execs[key] = fn
-        while len(self._execs) > self.exec_capacity:
-            self._execs.popitem(last=False)
+            nbytes = _exec_nbytes(fn)
+        nbytes = nbytes or _EXEC_DEFAULT_NBYTES
+        self._execs[key] = (fn, nbytes)
+        self.stats["exec_bytes"] += nbytes
+        while len(self._execs) > self.exec_capacity or (
+                self.exec_budget_bytes is not None
+                and self.stats["exec_bytes"] > self.exec_budget_bytes
+                and len(self._execs) > 1):
+            _, (_, nb) = self._execs.popitem(last=False)
+            self.stats["exec_bytes"] -= nb
             self.stats["exec_evictions"] += 1
         return fn
+
+    @property
+    def exec_hit_rate(self) -> float:
+        """Fraction of executable lookups served from cache (the plan
+        level's ``share_rate`` analogue)."""
+        total = self.stats["exec_hits"] + self.stats["exec_misses"]
+        return self.stats["exec_hits"] / total if total else 0.0
 
     # -- introspection -----------------------------------------------------
     @property
@@ -233,6 +533,12 @@ class PlanStore:
     def n_execs(self) -> int:
         return len(self._execs)
 
+    @property
+    def n_restorable(self) -> int:
+        """Restored entries staged but not yet redeemed."""
+        return len(self._restored_raw) + sum(
+            len(p["buckets"]) for p in self._restored_parsed.values())
+
     def __len__(self):
         return len(self._plans) + len(self._execs)
 
@@ -240,8 +546,53 @@ class PlanStore:
         out = dict(self.stats)
         out["n_plans"] = self.n_plans
         out["n_execs"] = self.n_execs
+        out["n_restorable"] = self.n_restorable
         out["share_rate"] = round(self.share_rate, 4)
+        out["exec_hit_rate"] = round(self.exec_hit_rate, 4)
         return out
+
+
+def resolve_plan_store(plan_store, plan_store_path) -> Optional[PlanStore]:
+    """Bind a ``PlanStore`` to an on-disk artifact.
+
+    No path: the given store (possibly ``None``) unchanged.  Path only:
+    open/warm-start a store from it.  Both: bind the path to the given
+    store so ``checkpoint_plan_store`` writes back.  Shared by the
+    serve/train/launch step builders so trainer relaunches and
+    multi-bucket server start-up skip re-lowering.
+    """
+    if not plan_store_path:
+        return plan_store
+    if plan_store is None:
+        return PlanStore.open(plan_store_path)
+    plan_store.path = plan_store_path
+    return plan_store
+
+
+def checkpoint_plan_store(plan_store) -> int:
+    """Persist a path-bound store (no-op otherwise); builders call this
+    right after lowering so the artifact exists even if the process
+    dies before serving a single step."""
+    if plan_store is not None and plan_store.path:
+        return plan_store.save()
+    return 0
+
+
+def _exec_nbytes(compiled) -> int:
+    """Footprint estimate of a compiled executable via XLA's memory
+    analysis; 0 when the backend exposes none (caller applies a floor)."""
+    try:
+        ma = compiled.memory_analysis()
+    except Exception:
+        return 0
+    total = 0
+    for field in ("generated_code_size_in_bytes", "argument_size_in_bytes",
+                  "output_size_in_bytes", "temp_size_in_bytes"):
+        try:
+            total += int(getattr(ma, field, 0) or 0)
+        except (TypeError, ValueError):
+            pass
+    return total
 
 
 GLOBAL_STORE = PlanStore()

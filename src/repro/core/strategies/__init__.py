@@ -14,14 +14,14 @@ files is the reproduction of the paper's engineering-cost claim.
   dynamic      context-driven selection among the above (the paper's
                headline contribution: per-bucket strategy choice)
 """
-from .sequential import Sequential
-from .nanoflow import NanoFlow
-from .dbo import DualBatchOverlap
-from .sbo import SingleBatchOverlap
-from .tokenweave import TokenWeave
 from .comet import Comet
-from .flux import Flux
+from .dbo import DualBatchOverlap
 from .dynamic import DynamicScheduler
+from .flux import Flux
+from .nanoflow import NanoFlow
+from .sbo import SingleBatchOverlap
+from .sequential import Sequential
+from .tokenweave import TokenWeave
 
 STRATEGIES = {
     "sequential": Sequential,

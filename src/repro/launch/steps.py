@@ -13,6 +13,7 @@ import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from ..configs.base import ShapeConfig
+from ..core.plan_store import checkpoint_plan_store, resolve_plan_store
 from ..core.scheduler import OpSchedulerBase, ScheduleContext
 from ..models.base import build_forward
 from ..train.step import TrainStepConfig, build_train_step
@@ -58,7 +59,8 @@ def build_global_train_step(model, scheduler: OpSchedulerBase,
                             tcfg: TrainStepConfig = None,
                             remat_policy: str = "full",
                             lowered: bool = None,
-                            plan_store=None):
+                            plan_store=None,
+                            plan_store_path: str = None):
     # lowered=None defers to tcfg (default True); an explicit bool wins
     tcfg = tcfg or TrainStepConfig(remat=True, remat_policy=remat_policy)
     if lowered is not None and lowered != tcfg.lowered:
@@ -69,7 +71,7 @@ def build_global_train_step(model, scheduler: OpSchedulerBase,
     info = _sched_info(model.cfg.name, shape, B_loc, mesh)
     step, segs, _, init_opt = build_train_step(
         model, scheduler, B_loc, shape.seq_len, tcfg, info,
-        plan_store=plan_store)
+        plan_store=plan_store, plan_store_path=plan_store_path)
     p_sdss, p_shd = global_param_specs(model, segs, mesh)
     p_specs = shard_specs_of(p_shd)
     opt_sdss, opt_specs = _opt_specs(p_sdss, p_specs)
@@ -109,11 +111,15 @@ def _kv_collect_specs(out_env, mesh, replicated):
 def build_global_prefill_step(model, scheduler: OpSchedulerBase,
                               shape: ShapeConfig, mesh,
                               lowered: bool = True,
-                              plan_store=None):
+                              plan_store=None,
+                              plan_store_path: str = None):
     """``plan_store``: a shared ``PlanStore`` — building several prefill
     bucket steps against one store lowers each segment once and
     specializes the rest (fingerprint v2 scopes entries by the model's
-    op-closure config, so one store may serve several meshes)."""
+    op-closure config, so one store may serve several meshes).
+    ``plan_store_path``: persist/warm-start that store on disk, so a
+    server restart builds every known bucket from restored lowerings."""
+    plan_store = resolve_plan_store(plan_store, plan_store_path)
     batch_sdss, batch_shd, B_loc, repl = global_batch_specs(
         model, "prefill", shape.seq_len, shape.global_batch, mesh,
         s_max=shape.seq_len)
@@ -123,6 +129,7 @@ def build_global_prefill_step(model, scheduler: OpSchedulerBase,
     fwd = build_forward(segs, scheduler, info, lowered=lowered,
                         plan_cache=plan_store,
                         op_config=model.op_closure_config())
+    checkpoint_plan_store(plan_store)
     p_sdss, p_shd = global_param_specs(model, segs, mesh)
     p_specs = shard_specs_of(p_shd)
     batch_specs = shard_specs_of(batch_shd)
@@ -155,7 +162,9 @@ def build_global_prefill_step(model, scheduler: OpSchedulerBase,
 def build_global_decode_step(model, scheduler: OpSchedulerBase,
                              shape: ShapeConfig, mesh,
                              lowered: bool = True,
-                             plan_store=None):
+                             plan_store=None,
+                             plan_store_path: str = None):
+    plan_store = resolve_plan_store(plan_store, plan_store_path)
     s_max = shape.seq_len
     batch_sdss, batch_shd, B_loc, repl = global_batch_specs(
         model, "decode", shape.seq_len, shape.global_batch, mesh,
@@ -165,6 +174,7 @@ def build_global_decode_step(model, scheduler: OpSchedulerBase,
     fwd = build_forward(segs, scheduler, info, lowered=lowered,
                         plan_cache=plan_store,
                         op_config=model.op_closure_config())
+    checkpoint_plan_store(plan_store)
     p_sdss, p_shd = global_param_specs(model, segs, mesh)
     p_specs = shard_specs_of(p_shd)
     batch_specs = shard_specs_of(batch_shd)

@@ -22,8 +22,8 @@ import jax.numpy as jnp
 from jax import lax
 
 from ..configs.base import ArchConfig
-from ..core import (OpGraph, Realizer, partition, record_plan, ScheduleContext,
-                    trace)
+from ..core import (OpGraph, Realizer, ScheduleContext, partition,
+                    record_plan, trace)
 from ..core.module import Module
 from ..core.scheduler import OpSchedulerBase
 from .layers import (AddOp, AllGatherOp, AttentionOp, DecodeAttentionOp,

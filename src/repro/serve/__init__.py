@@ -1,2 +1,2 @@
-from .engine import ServeConfig, ServeEngine, Request
+from .engine import Request, ServeConfig, ServeEngine
 from .kv_cache import KVCacheManager

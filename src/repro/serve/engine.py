@@ -50,10 +50,16 @@ class ServeConfig:
     lowered: bool = True               # slot-based lowered plan replay
     # PlanStore budgets: bucketed serving churns through (shape, plan)
     # pairs, so both cache levels are bounded — plans by an LRU byte
-    # budget, executables by entry count.
+    # budget, executables by entry count and an optional byte budget.
     plan_capacity: int = 256
     plan_budget_bytes: Optional[int] = 32 << 20
     exec_capacity: int = 64
+    exec_budget_bytes: Optional[int] = None
+    # Persistent PlanStore: when set, the engine warm-starts from this
+    # file on construction (a restarted server serves every
+    # previously-seen bucket without re-lowering) and checkpoints the
+    # store back when the request queue drains and on ``shutdown()``.
+    plan_store_path: Optional[str] = None
 
 
 class ServeEngine:
@@ -64,9 +70,14 @@ class ServeEngine:
         self.scheduler = scheduler
         self.cfg = cfg
         self.cache = KVCacheManager(model, cfg.max_batch, cfg.s_max)
-        self.store = PlanStore(plan_capacity=cfg.plan_capacity,
-                               plan_budget_bytes=cfg.plan_budget_bytes,
-                               exec_capacity=cfg.exec_capacity)
+        budgets = dict(plan_capacity=cfg.plan_capacity,
+                       plan_budget_bytes=cfg.plan_budget_bytes,
+                       exec_capacity=cfg.exec_capacity,
+                       exec_budget_bytes=cfg.exec_budget_bytes)
+        if cfg.plan_store_path:
+            self.store = PlanStore.open(cfg.plan_store_path, **budgets)
+        else:
+            self.store = PlanStore(**budgets)
         self._op_config = model.op_closure_config()
         self.waiting: list[Request] = []
         self.active: dict[int, Request] = {}     # row -> request
@@ -87,7 +98,25 @@ class ServeEngine:
             self._admit()
             self._decode_step()
             it += 1
+        # idle: the queue drained — checkpoint lowered plans so a restart
+        # (or a sibling process) warm-starts instead of re-lowering
+        self.checkpoint()
         return self.finished
+
+    def checkpoint(self) -> int:
+        """Persist the PlanStore when a path is configured; returns the
+        number of outer entries written (0 when persistence is off or
+        nothing changed since the last checkpoint — run() calls this on
+        every queue drain, so a steady-state server must not rewrite an
+        unchanged artifact per request)."""
+        if not self.cfg.plan_store_path or not self.store.dirty:
+            return 0
+        return self.store.save()
+
+    def shutdown(self) -> int:
+        """Checkpoint and release; the engine stays usable afterwards but
+        a well-behaved server calls this exactly once on the way out."""
+        return self.checkpoint()
 
     @property
     def stats(self):

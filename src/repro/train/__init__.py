@@ -1,2 +1,2 @@
-from .step import TrainStepConfig, build_train_step, reduce_grads
 from .loop import TrainLoopConfig, train_loop
+from .step import TrainStepConfig, build_train_step, reduce_grads

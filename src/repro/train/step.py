@@ -20,6 +20,7 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
+from ..core.plan_store import checkpoint_plan_store, resolve_plan_store
 from ..core.scheduler import OpSchedulerBase, ScheduleContext
 from ..dist import collectives as col
 from ..models.base import build_forward
@@ -104,7 +105,7 @@ def global_grad_norm(grads, pspecs, mesh_info):
 def build_train_step(model, scheduler: OpSchedulerBase, B_loc: int, S: int,
                      cfg: TrainStepConfig,
                      info: Optional[ScheduleContext] = None,
-                     plan_store=None):
+                     plan_store=None, plan_store_path: Optional[str] = None):
     """Returns (train_step, segments, binputs, init_opt).
 
     ``train_step(params, opt_state, batch, step) ->
@@ -113,7 +114,12 @@ def build_train_step(model, scheduler: OpSchedulerBase, B_loc: int, S: int,
     ``plan_store``: optional shared ``PlanStore`` so rebuilding the step
     (new seq-len bucket, restart after preemption) specializes the
     already-lowered segment plans instead of re-running analysis+lowering.
+    ``plan_store_path``: persist that store on disk — a relaunched
+    trainer restores the canonical lowerings and rebuilds its step
+    without a single ``lower`` call (the store is checkpointed right
+    after the forward is built).
     """
+    plan_store = resolve_plan_store(plan_store, plan_store_path)
     segs, binputs = model.build_segments("train", B_loc, S)
     info = info or ScheduleContext(
         local_batch=B_loc, global_batch=B_loc, seq_len=S, phase="train",
@@ -122,6 +128,7 @@ def build_train_step(model, scheduler: OpSchedulerBase, B_loc: int, S: int,
                         remat_policy=cfg.remat_policy, lowered=cfg.lowered,
                         plan_cache=plan_store,
                         op_config=model.op_closure_config())
+    checkpoint_plan_store(plan_store)
     pspecs = model.param_pspecs(segs)
     sp_train = bool(getattr(model.cfg, "seq_parallel", False))
     mesh_info = model.mesh

@@ -110,3 +110,58 @@ def test_cross_bucket_plan_share(engine_setup):
     assert eng.store.share_rate > 0
     # eviction stats surface through engine metrics
     assert "evictions" in eng.stats["plan_store"]
+
+
+def test_engine_warm_starts_from_persisted_store(engine_setup, tmp_path,
+                                                 monkeypatch):
+    """A restarted engine bound to the same plan_store_path serves its
+    requests with zero lower() calls (restore hits + shares only) and
+    produces identical tokens."""
+    cfg, model, params = engine_setup
+    path = str(tmp_path / "plans.dfps")
+    rng = np.random.default_rng(3)
+    prompts = [rng.integers(0, 100, n).astype(np.int32) for n in (10, 20)]
+
+    eng = make_engine(model, params, plan_store_path=path)
+    for i, pr in enumerate(prompts):
+        eng.submit(Request(rid=i, prompt=pr.copy(), max_new_tokens=3))
+    want = [r.output for r in sorted(eng.run(), key=lambda r: r.rid)]
+    eng.shutdown()
+    assert path and eng.store.stats["restore_saved"] >= 1
+
+    # "restart": fresh engine, same path; any lower() call is a failure
+    from repro.core import plan_store as plan_store_mod
+
+    def bomb(*a, **k):
+        raise AssertionError("warm-started engine re-lowered a plan")
+    monkeypatch.setattr(plan_store_mod, "lower", bomb)
+    eng2 = make_engine(model, params, plan_store_path=path)
+    for i, pr in enumerate(prompts):
+        eng2.submit(Request(rid=i, prompt=pr.copy(), max_new_tokens=3))
+    got = [r.output for r in sorted(eng2.run(), key=lambda r: r.rid)]
+    assert got == want
+    st = eng2.store.snapshot()
+    assert st["misses"] == 0, st
+    assert st["restore_hits"] + st["shares"] > 0, st
+
+
+def test_train_step_builder_warm_starts(engine_setup, tmp_path,
+                                        monkeypatch):
+    """build_train_step(plan_store_path=...) persists the lowerings and a
+    relaunch restores them without re-lowering (trainer preemption)."""
+    from repro.core.strategies import get_strategy
+    from repro.train.step import TrainStepConfig, build_train_step
+    cfg, model, params = engine_setup
+    path = str(tmp_path / "train-plans.dfps")
+    tcfg = TrainStepConfig(remat=False)
+    build_train_step(model, get_strategy("sequential"), 2, 16, tcfg,
+                     plan_store_path=path)
+    assert (tmp_path / "train-plans.dfps").exists()
+
+    from repro.core import plan_store as plan_store_mod
+
+    def bomb(*a, **k):
+        raise AssertionError("relaunched trainer re-lowered a plan")
+    monkeypatch.setattr(plan_store_mod, "lower", bomb)
+    build_train_step(model, get_strategy("sequential"), 2, 16, tcfg,
+                     plan_store_path=path)
