@@ -42,7 +42,7 @@ def _time(fn, n=20, warmup=2):
     return (time.perf_counter() - t0) / n * 1e6        # us
 
 
-def run(plan_store_path=None):
+def run(plan_store_path=None, with_serve=False):
     from repro.configs import get_smoke_config
     from repro.core import (PlanStore, Realizer, lower, partition,
                             record_plan, static_analysis)
@@ -274,6 +274,26 @@ def run(plan_store_path=None):
     out.append(f"overhead/dispatch_cold,{t_miss:.1f},us")
     out.append(f"overhead/dispatch_cached,{t_hit:.1f},us")
     out.append(f"overhead/cache_speedup,{t_miss / max(t_hit, 1e-9):.1f},x")
+
+    # -- serve-runtime summary: tiered async engine vs fixed-batch -------
+    # baseline (the full per-tier breakdown lives in serve_bench.py; the
+    # headline speedup and the tier share counters ride along here so
+    # one overhead.csv carries the whole dispatch-path story).  Opt-in:
+    # the serve trace costs a minute, so only the jobs that publish
+    # overhead.csv pass --with-serve; the timed warmstart-gate runs and
+    # the benchmarks/run.py table skip it.
+    if with_serve:
+        try:
+            from benchmarks import serve_bench   # package harness path
+        except ImportError:
+            import serve_bench                   # script path
+        srows = {r.split(",")[0]: r for r in serve_bench.run(requests=8,
+                                                             repeats=2)}
+        for key in ("serve/baseline_tps", "serve/tiered_tps",
+                    "serve/tiered_speedup", "serve/decode_tier_shares",
+                    "serve/decode_tier_lowers",
+                    "serve/tiered_syncs_per_decode"):
+            out.append(srows[key].replace("serve/", "overhead/serve_", 1))
     return out
 
 
@@ -282,4 +302,9 @@ if __name__ == "__main__":
     ap.add_argument("--plan-store", default=None,
                     help="persist the PlanStore here across invocations "
                          "(the CI warmstart-gate runs this twice)")
-    print("\n".join(run(plan_store_path=ap.parse_args().plan_store)))
+    ap.add_argument("--with-serve", action="store_true",
+                    help="append the serve_bench summary rows "
+                         "(tiered-vs-baseline tok/s + tier counters)")
+    args = ap.parse_args()
+    print("\n".join(run(plan_store_path=args.plan_store,
+                        with_serve=args.with_serve)))

@@ -61,7 +61,12 @@ def main():
           f"({toks/dt:.1f} tok/s)")
     print(f"TTFT p50={np.percentile(ttft, 50)*1e3:.0f}ms "
           f"p99={np.percentile(ttft, 99)*1e3:.0f}ms")
-    print(f"engine stats: {eng.stats}")
+    st = eng.stats
+    print(f"decode tier mix: "
+          f"{ {t: n for t, n in st['tier_steps'].items() if n} } "
+          f"({st['host_syncs']} host syncs / {st['decode_steps']} decode "
+          f"steps, {st['chunk_steps']} chunk steps)")
+    print(f"engine stats: {st}")
     ps = eng.store.snapshot()
     print(f"plan store: {ps['exec_misses']} builds, {ps['exec_hits']} "
           f"replays (the CUDA-graph-capture analogue); "

@@ -381,16 +381,28 @@ def specialize(canonical: LoweredPlan, graph: OpGraph, plan: ExecutionPlan,
                struct_key: Optional[tuple] = None) -> LoweredPlan:
     """Re-derive a canonical lowering for a new shape bucket.
 
-    The cross-bucket share path: a prefill bucket re-traces the same layer
-    program at a different sequence length, so its (graph, plan) pair is
-    *structurally* identical to an already-lowered one — same nodes, same
-    step stream, same slots and death sites — and only the shape-dependent
-    pieces differ: slice ``(axis, offset, size)`` triples, merge-buffer
-    pad configs, and the op callables (closures re-traced with the new
-    shapes).  ``specialize`` rewrites exactly those from ``canonical``,
-    skipping static analysis and slot allocation entirely; everything
-    liveness-derived (slots, frees, param interning, input/output slot
-    maps) is reused verbatim.  This loop is the per-bucket warm-up cost,
+    The cross-bucket share path: a prefill bucket re-traces the same
+    layer program at a different sequence length, and a decode batch
+    tier re-traces it at a different *batch* size — either way the
+    (graph, plan) pair is *structurally* identical to an already-lowered
+    one — same nodes, same step stream, same slots and death sites — and
+    only the shape-dependent pieces differ: slice ``(axis, offset,
+    size)`` triples (micro-batch offsets/sizes are re-read from the new
+    plan's ``split_sizes``, so a split over a smaller batch rewrites
+    cleanly), merge-buffer pad configs (padding widths come from the new
+    graph's tensor shapes, batch dim included), and the op callables
+    (closures re-traced with the new shapes).  ``specialize`` rewrites
+    exactly those from ``canonical``, skipping static analysis and slot
+    allocation entirely; everything liveness-derived (slots, frees,
+    param interning, input/output slot maps) is reused verbatim.  The
+    serve engine's decode tiers lean on the batch half: tiers 2..N of
+    ``max_batch`` are shares off one canonical capture, with the tier
+    living in the PlanStore's inner (shape-bucket) key.  A tier whose
+    scheduler asks for a different micro-batch *count* (e.g. batch 1
+    cannot split in two) changes the structural key and cold-lowers as
+    its own canonical — counted under ``specialize_rejects`` when it
+    reached the specialize attempt.  This loop is the per-bucket warm-up
+    cost,
     so it stays allocation-light: unchanged read/write tuples are reused,
     and ``Instr`` is rebuilt positionally (``dataclasses.replace`` is
     several times slower and would erase the share-path speedup).

@@ -154,6 +154,7 @@ class PlanStore:
         self._dirty = False                        # plan-level state vs disk
         self.stats = {
             "hits": 0, "misses": 0, "shares": 0, "evictions": 0,
+            "specialize_rejects": 0,
             "lower_s": 0.0, "specialize_s": 0.0, "plan_bytes": 0,
             "one_shot_evictions": 0,
             "restore_hits": 0, "restore_canonicals": 0,
@@ -201,7 +202,11 @@ class PlanStore:
                 lowered = specialize(canonical, graph, plan, capture=capture,
                                      struct_key=skey)
             except LoweringError:
-                lowered = None          # structure drifted: full lower below
+                # structure drifted (e.g. a batch tier whose scheduler
+                # changed the micro-batch count): full lower below,
+                # observable so tier configs that never share are loud
+                lowered = None
+                self.stats["specialize_rejects"] += 1
             if lowered is not None:
                 self.stats["specialize_s"] += time.perf_counter() - t0
                 self.stats["shares"] += 1

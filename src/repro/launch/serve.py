@@ -1,7 +1,12 @@
-"""Serving launcher: batched engine over a (smoke-sized) model.
+"""Serving launcher: tiered async batched engine over a (smoke-sized)
+model.
 
   python -m repro.launch.serve --arch chatglm3-6b --smoke \
       --requests 16 --max-new 16 --strategy dynamic
+
+``--baseline`` reverts the engine to the synchronous fixed-batch shape
+(single decode tier, one-request prefill, per-step host sync) for A/B
+comparison against the tiered async default.
 """
 from __future__ import annotations
 
@@ -28,16 +33,28 @@ def main(argv=None):
     ap.add_argument("--s-max", type=int, default=128)
     ap.add_argument("--strategy", default="dynamic")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--prefill-batch", type=int, default=4,
+                    help="max requests packed into one prefill call")
+    ap.add_argument("--baseline", action="store_true",
+                    help="fixed-batch synchronous engine (no tiers, "
+                         "batch-1 prefill, per-step host sync)")
+    ap.add_argument("--plan-store", default=None,
+                    help="persist lowered plans here (warm restarts)")
     args = ap.parse_args(argv)
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
     model = build_model(cfg, MeshInfo(tp=1, dp=1))
     segs, _ = model.build_segments("prefill", 1, 32, s_max=args.s_max)
     params = model._init_from_segments(segs, jax.random.PRNGKey(0))
-    eng = ServeEngine(model, params, get_strategy(args.strategy),
-                      ServeConfig(max_batch=args.max_batch,
-                                  s_max=args.s_max,
-                                  prefill_buckets=(16, 32, 64)))
+    scfg = ServeConfig(max_batch=args.max_batch, s_max=args.s_max,
+                       prefill_buckets=(16, 32, 64),
+                       prefill_batch=1 if args.baseline
+                       else args.prefill_batch,
+                       decode_tiers=(args.max_batch,) if args.baseline
+                       else None,
+                       async_host=not args.baseline,
+                       plan_store_path=args.plan_store)
+    eng = ServeEngine(model, params, get_strategy(args.strategy), scfg)
     rng = np.random.default_rng(args.seed)
     t0 = time.perf_counter()
     for i in range(args.requests):
@@ -51,9 +68,16 @@ def main(argv=None):
     toks = sum(len(r.output) for r in done)
     print(f"served {len(done)} requests, {toks} tokens in {dt:.2f}s "
           f"({toks/dt:.1f} tok/s)  stats={eng.stats}")
+    st = eng.stats
+    tier_mix = {t: n for t, n in st["tier_steps"].items() if n}
+    print(f"decode tier mix: {tier_mix}  "
+          f"({st['host_syncs']} host syncs / {st['decode_steps']} decode "
+          f"steps, {st['row_moves']} row moves, "
+          f"{st['chunk_steps']} chunk steps)")
     ttfts = [r.first_token_s - r.submitted_s for r in done]
     print(f"TTFT p50={np.percentile(ttfts, 50)*1e3:.0f}ms "
           f"p99={np.percentile(ttfts, 99)*1e3:.0f}ms")
+    eng.shutdown()
     return done
 
 

@@ -67,7 +67,10 @@ def global_batch_specs(model, phase: str, seq_len: int, global_batch: int,
     replicated = global_batch < dp_total
     B_loc = max(1, global_batch // dp_total)
 
-    binputs = model.batch_inputs(phase, B_loc, seq_len, s_max=s_max)
+    # decode steps are single-token here (``seq_len`` is the cache depth
+    # s_max, not the step width — chunked decode is a serve-engine path)
+    step_len = 1 if phase == "decode" else seq_len
+    binputs = model.batch_inputs(phase, B_loc, step_len, s_max=s_max)
     sdss, shds = {}, {}
     for name, (sds, bd) in binputs.items():
         gshape = list(sds.shape)

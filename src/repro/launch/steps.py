@@ -159,6 +159,38 @@ def build_global_prefill_step(model, scheduler: OpSchedulerBase,
     return fn, (p_sdss, batch_sdss), (p_shd, batch_shd), (), segs
 
 
+def build_global_decode_tiers(model, scheduler: OpSchedulerBase,
+                              shape: ShapeConfig, mesh,
+                              tiers=None,
+                              lowered: bool = True,
+                              plan_store=None,
+                              plan_store_path: str = None) -> dict:
+    """Decode steps at every batch tier against one shared PlanStore —
+    the launch-layer analogue of the serve engine's tiered captures.
+
+    ``tiers`` are *global* decode batch sizes (default: powers of two up
+    to ``shape.global_batch``).  Decode graphs are structurally identical
+    across batch sizes, so the first tier pays the lowering and every
+    further tier derives from it via ``specialize()`` (PlanStore shares;
+    the inner cache key carries the tier).  Returns
+    ``{tier: (fn, in_sdss, in_shardings, donate, segs)}``.
+    """
+    import dataclasses as _dc
+
+    from ..serve.engine import pow2_tiers
+    plan_store = resolve_plan_store(plan_store, plan_store_path)
+    tiers = tuple(tiers or pow2_tiers(shape.global_batch))
+    out = {}
+    for tier in tiers:
+        tshape = _dc.replace(shape, name=f"{shape.name}@{tier}",
+                             global_batch=tier)
+        out[tier] = build_global_decode_step(
+            model, scheduler, tshape, mesh, lowered=lowered,
+            plan_store=plan_store)
+    checkpoint_plan_store(plan_store)
+    return out
+
+
 def build_global_decode_step(model, scheduler: OpSchedulerBase,
                              shape: ShapeConfig, mesh,
                              lowered: bool = True,

@@ -377,10 +377,13 @@ class LMBase:
                 "ids": (jax.ShapeDtypeStruct((B_loc, S), i32), 0),
                 "positions": (jax.ShapeDtypeStruct(pos_shape, i32), pos_bd),
             }
-        pos_shape = ((3, B_loc, 1) if self.cfg.rope == "mrope"
-                     else (B_loc, 1))
+        # decode: S tokens per step.  S == 1 is the classic single-token
+        # decode; S > 1 runs the same cached-attention graph over a chunk
+        # of S query positions (chunked prefill through the decode path).
+        pos_shape = ((3, B_loc, S) if self.cfg.rope == "mrope"
+                     else (B_loc, S))
         return {
-            "ids": (jax.ShapeDtypeStruct((B_loc, 1), i32), 0),
+            "ids": (jax.ShapeDtypeStruct((B_loc, S), i32), 0),
             "positions": (jax.ShapeDtypeStruct(pos_shape, i32), pos_bd),
             "cache_len": (jax.ShapeDtypeStruct((B_loc,), i32), 0),
         }
@@ -407,10 +410,12 @@ class LMBase:
                   if k in esig.parameters}
         g = trace(emb, emb_in, batch_dims={k: binputs[k][1] for k in emb_in})
         segs.append(Segment("embed", emb, g))
-        d_loc = self.seq_local(phase, S if phase != "decode" else 1)
-        x_sds = jax.ShapeDtypeStruct(
-            (B_loc, d_loc if phase != "decode" else 1, cfg.d_model),
-            jnp.bfloat16)
+        # decode is never sequence-parallel, so its x keeps the full chunk
+        # length S (1 for single-token decode, the chunk size for chunked
+        # prefill through the decode graph)
+        d_loc = self.seq_local(phase, S)
+        x_sds = jax.ShapeDtypeStruct((B_loc, d_loc, cfg.d_model),
+                                     jnp.bfloat16)
         for stack in self.layer_stacks(phase):
             name, mod, count, sc_in, sc_out = stack[:5]
             opts = stack[5] if len(stack) > 5 else {}

@@ -501,7 +501,9 @@ class HeadLayout:
 
 def _sdpa(q, k, v, causal: bool, q_offset=0, valid_len=None):
     """Reference attention.  q (B,Sq,H,hd), k/v (B,Sk,H,hd).
-    ``valid_len``: scalar or (B,) per-request cache lengths."""
+    ``valid_len``: scalar, (B,) per-request cache lengths, or (B,Sq)
+    per-query-position lengths (chunked decode: position j of the chunk
+    sees ``cache_len + j + 1`` keys)."""
     B, Sq, H, hd = q.shape
     Sk = k.shape[1]
     scale = 1.0 / math.sqrt(hd)
@@ -513,7 +515,10 @@ def _sdpa(q, k, v, causal: bool, q_offset=0, valid_len=None):
         logits = jnp.where(ki <= qi, logits, -1e30)
     if valid_len is not None:
         vl = jnp.asarray(valid_len)
-        vl = vl.reshape(-1, 1, 1, 1) if vl.ndim else vl
+        if vl.ndim == 2:                    # (B,Sq) -> (B,1,Sq,1)
+            vl = vl[:, None, :, None]
+        elif vl.ndim:                       # (B,)   -> (B,1,1,1)
+            vl = vl.reshape(-1, 1, 1, 1)
         ki = jnp.arange(Sk)[None, None, None, :]
         logits = jnp.where(ki < vl, logits, -1e30)
     w = jax.nn.softmax(logits, axis=-1).astype(q.dtype)
@@ -688,13 +693,18 @@ class DecodeAttentionOp(Op):
         valid = jnp.asarray(lay.q_valid_map())[col.axis_index("model")]
         k_per_q = jnp.take(k_cache, slot, axis=2)
         v_per_q = jnp.take(v_cache, slot, axis=2)
-        if self.impl == "pallas":
+        Sq = q.shape[1]
+        if self.impl == "pallas" and Sq == 1:
             from ..kernels import ops as kops
             out = kops.decode_attention(q, k_per_q, v_per_q, clen + 1)
         else:
+            # chunked decode (Sq > 1): query position j attends the cache
+            # prefix plus the chunk up to and including itself —
+            # ``cache_len + j + 1`` keys (per-row, per-position lengths).
+            vl = (clen + 1 if Sq == 1
+                  else clen[:, None] + 1 + jnp.arange(Sq, dtype=clen.dtype))
             with jax.named_scope("flashable_decode"):
-                out = _sdpa(q, k_per_q, v_per_q, causal=False,
-                            valid_len=clen + 1)
+                out = _sdpa(q, k_per_q, v_per_q, causal=False, valid_len=vl)
         out = out * valid[None, None, :, None].astype(out.dtype)
         return out, k_cache, v_cache
 
@@ -710,13 +720,16 @@ class DecodeAttentionOp(Op):
 
 
 def _dus_time(cache, new, t):
-    """dynamic_update_slice at per-row time indices ``t`` (B,) along dim 1."""
+    """dynamic_update_slice at per-row time indices ``t`` (B,) along dim 1.
+    ``new`` may carry one token (decode) or a whole chunk (chunked
+    prefill); callers must keep ``t + new.shape[1] <= S_max`` or the
+    clamped start would silently shift the write window."""
     t = jnp.asarray(t, jnp.int32)
     if t.ndim == 0:
         idx = (jnp.int32(0), t.reshape(()), jnp.int32(0), jnp.int32(0))
         return lax.dynamic_update_slice(cache, new.astype(cache.dtype), idx)
 
-    def one(c, n, ti):   # c (S,kv,hd), n (1,kv,hd)
+    def one(c, n, ti):   # c (S,kv,hd), n (Sq,kv,hd)
         return lax.dynamic_update_slice(
             c, n.astype(c.dtype), (ti, jnp.int32(0), jnp.int32(0)))
 

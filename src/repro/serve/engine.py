@@ -1,12 +1,42 @@
-"""Batched serving engine: bucketed prefill + continuous-batching decode.
+"""Tiered async serving engine: batch-tier decode captures, batched and
+chunked prefill admission, and a double-buffered host loop.
 
-The runtime dispatcher half of the paper's §3.3.2 story: incoming prompts
-are rounded up to a shape bucket, the (plan, bucket) pair hits the
-unified ``PlanStore`` (the CUDA-graph-capture analogue), and the
-scheduler's plan for that bucket is replayed.  The first bucket pays the
-full lowering; every further bucket shares it via fingerprint-v2
-specialization.  Decode runs one static-shape step over the whole cache
-pool every iteration; requests claim/release rows (continuous batching).
+The runtime dispatcher half of the paper's §3.3.2 story, grown into the
+shape the backend thesis demands — a runtime that "manages complex
+control/data-flow asynchronously" and "uses custom memory management to
+eliminate copy overheads":
+
+  * **Decode batch tiers.**  Decode captures are built at power-of-two
+    batch tiers (1, 2, 4, …, ``max_batch``); each step runs the smallest
+    tier covering the active rows instead of always paying ``max_batch``
+    worth of compute.  Tiers 2..N never re-lower: the decode (graph,
+    plan) pair is *structurally* identical across batch sizes, so the
+    ``PlanStore`` derives every further tier from one canonical lowering
+    via ``specialize()`` (the batch dimension is just another rewritten
+    shape bucket; the inner store key carries the tier).  Active rows are
+    compacted into the low slots on tier shrink so the tier prefix is
+    always dense.
+
+  * **Batched + chunked prefill.**  ``_admit`` packs several waiting
+    requests into one bucketed prefill call (a real batch dimension with
+    per-row lengths), and prompts longer than the largest bucket run as
+    chunked prefill steps through the *decode* graph at chunk-sized
+    query length — cached attention where chunk position ``j`` sees
+    ``cache_len + j + 1`` keys — instead of crashing.
+
+  * **Async host loop.**  Sampling is on-device (argmax + eos/length
+    masks inside the jitted decode step), prefill KV lands in the cache
+    pool via ``dynamic_update_slice`` inside the jitted prefill step
+    (donated buffers — no host-side numpy slicing on the copy path), and
+    decode steps chain their sampled tokens on-device through a
+    ``last_ids`` vector.  The host loop is double-buffered: step k+1 is
+    dispatched before step k's small token/done vector is fetched with a
+    single ``jax.device_get`` — one host sync per decode iteration
+    instead of one per token-row.
+
+Set ``ServeConfig(decode_tiers=(max_batch,), prefill_batch=1,
+async_host=False)`` to recover the synchronous fixed-batch baseline
+(benchmarked in ``benchmarks/serve_bench.py``).
 
 The engine is single-host/mesh-free here (tp=1); the launch layer wraps
 the same step functions in shard_map for the production mesh.
@@ -20,11 +50,22 @@ from typing import Callable, Optional
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax import lax
 
 from ..core.plan_store import PlanStore
 from ..core.scheduler import OpSchedulerBase, ScheduleContext
 from ..models.base import build_forward
 from .kv_cache import KVCacheManager
+
+
+def pow2_tiers(n: int) -> tuple:
+    """Power-of-two capture tiers up to and including ``n``."""
+    ts, t = [], 1
+    while t < n:
+        ts.append(t)
+        t *= 2
+    ts.append(n)
+    return tuple(sorted(set(ts)))
 
 
 @dataclasses.dataclass
@@ -48,6 +89,21 @@ class ServeConfig:
     prefill_buckets: tuple = (32, 64, 128, 256)
     greedy: bool = True
     lowered: bool = True               # slot-based lowered plan replay
+    # Tiered decode: captures at these batch sizes (ascending, last ==
+    # max_batch).  None = power-of-two tiers.  A single-element tuple
+    # (max_batch,) recovers the fixed-batch baseline.
+    decode_tiers: Optional[tuple] = None
+    # Batched prefill: pack up to this many waiting requests into one
+    # prefill call (batch dim bucketed to power-of-two group tiers).
+    prefill_batch: int = 4
+    # Chunked prefill: prompts longer than the largest bucket run as
+    # chunk-sized steps through the decode graph.  When off, oversized
+    # prompts are rejected at submit() with a ValueError (the pre-tiered
+    # engine raised an opaque numpy broadcast error instead).
+    chunked_prefill: bool = True
+    # Double-buffered host loop: dispatch step k+1 before fetching step
+    # k's token/done vector.  Off = harvest synchronously every step.
+    async_host: bool = True
     # PlanStore budgets: bucketed serving churns through (shape, plan)
     # pairs, so both cache levels are bounded — plans by an LRU byte
     # budget, executables by entry count and an optional byte budget.
@@ -69,6 +125,17 @@ class ServeEngine:
         self.params = params
         self.scheduler = scheduler
         self.cfg = cfg
+        if tuple(sorted(cfg.prefill_buckets)) != tuple(cfg.prefill_buckets):
+            raise ValueError("prefill_buckets must be ascending")
+        if max(cfg.prefill_buckets) > cfg.s_max:
+            raise ValueError("largest prefill bucket exceeds s_max")
+        self.tiers = tuple(cfg.decode_tiers or pow2_tiers(cfg.max_batch))
+        if self.tiers != tuple(sorted(self.tiers)) \
+                or self.tiers[-1] != cfg.max_batch:
+            raise ValueError(
+                f"decode_tiers must ascend to max_batch: {self.tiers}")
+        self.prefill_tiers = pow2_tiers(
+            max(1, min(cfg.prefill_batch, cfg.max_batch)))
         self.cache = KVCacheManager(model, cfg.max_batch, cfg.s_max)
         budgets = dict(plan_capacity=cfg.plan_capacity,
                        plan_budget_bytes=cfg.plan_budget_bytes,
@@ -82,26 +149,63 @@ class ServeEngine:
         self.waiting: list[Request] = []
         self.active: dict[int, Request] = {}     # row -> request
         self.finished: list[Request] = []
-        self._decode_fn = None
-        self._stats = {"prefill_steps": 0, "decode_steps": 0,
-                       "decode_tokens": 0}
+        # device-resident loop state: the sampled token of every row's
+        # last decode step, chained into the next step without touching
+        # the host (the async half of the double-buffered loop)
+        self._last_ids = jnp.zeros((cfg.max_batch, 1), jnp.int32)
+        self._gen = np.zeros((cfg.max_batch,), np.int32)   # tokens sampled
+        self._pending = None               # in-flight decode step handle
+        self._pending_prefill: list = []   # [(tok_dev, [(slot, req), ...])]
+        self._stats = {"prefill_steps": 0, "prefill_reqs": 0,
+                       "chunk_steps": 0, "decode_steps": 0,
+                       "decode_tokens": 0, "host_syncs": 0, "row_moves": 0,
+                       "tier_steps": {t: 0 for t in self.tiers},
+                       "tier_builds": {}}
         self._ck = self._cache_keys()
 
     # -- public -----------------------------------------------------------
     def submit(self, req: Request):
+        n = len(req.prompt)
+        if n < 1:
+            raise ValueError("empty prompt")
+        if n > self.cfg.s_max - 1:
+            raise ValueError(
+                f"prompt length {n} cannot fit s_max={self.cfg.s_max} "
+                "(need at least one decode slot)")
+        if n > self.cfg.prefill_buckets[-1]:
+            if not self.cfg.chunked_prefill:
+                raise ValueError(
+                    f"prompt length {n} exceeds the largest prefill bucket "
+                    f"{self.cfg.prefill_buckets[-1]} and chunked prefill "
+                    "is disabled")
+            self._chunk_plan(n)            # raises if it cannot be chunked
         req.submitted_s = time.perf_counter()
         self.waiting.append(req)
 
     def run(self, max_iters: int = 10_000) -> list:
         it = 0
-        while (self.waiting or self.active) and it < max_iters:
+        while (self.waiting or self.active or self._pending is not None
+               or self._pending_prefill) and it < max_iters:
             self._admit()
-            self._decode_step()
+            handle = self._dispatch_decode()
+            if self.cfg.async_host:
+                # double-buffered: step k+1 is now in flight; only then
+                # pay the (single) host sync for step k's tokens
+                prev, self._pending = self._pending, handle
+                self._harvest(prev)
+            else:
+                self._harvest(handle)
             it += 1
         # idle: the queue drained — checkpoint lowered plans so a restart
         # (or a sibling process) warm-starts instead of re-lowering
         self.checkpoint()
         return self.finished
+
+    def warmup(self, tiers: Optional[tuple] = None):
+        """Build decode captures ahead of traffic (all tiers by default)
+        so tier switches under load never hit a cold build."""
+        for t in tiers or self.tiers:
+            self._decode_fn(t)
 
     def checkpoint(self) -> int:
         """Persist the PlanStore when a path is configured; returns the
@@ -121,136 +225,358 @@ class ServeEngine:
     @property
     def stats(self):
         out = dict(self._stats)
+        out["tier_steps"] = dict(self._stats["tier_steps"])
         out["plan_store"] = self.store.snapshot()
         return out
 
-    # -- prefill ----------------------------------------------------------
+    # -- admission --------------------------------------------------------
     def _bucket(self, n: int) -> int:
         for b in self.cfg.prefill_buckets:
             if n <= b:
                 return b
         return self.cfg.prefill_buckets[-1]
 
-    def _prefill_fn(self, bucket: int) -> Callable:
+    def _tier_for(self, n: int, tiers: tuple) -> int:
+        for t in tiers:
+            if t >= n:
+                return t
+        return tiers[-1]
+
+    def _admit(self):
+        big = self.cfg.prefill_buckets[-1]
+        while self.waiting and self.cache.free_rows:
+            if len(self.waiting[0].prompt) > big:
+                self._admit_chunked(self.waiting.pop(0))
+                continue
+            group = []
+            while (self.waiting and self.cache.free_rows
+                   and len(group) < self.cfg.prefill_batch
+                   and len(self.waiting[0].prompt) <= big):
+                req = self.waiting.pop(0)
+                req.row = self.cache.allocate(req.rid)
+                group.append(req)
+            if group:
+                self._dispatch_prefill(group)
+
+    def _dispatch_prefill(self, group: list):
+        """One bucketed prefill call over a real batch of requests.
+
+        The jitted step writes each row's KV straight into the donated
+        cache pool (``dynamic_update_slice`` at the row index) and
+        samples the first token on-device; the host fetches the tiny
+        token vector together with the next decode harvest.  Group slots
+        are padded up to a power-of-two tier; padded slots alias a real
+        row and are unrolled *first* so the real row's write wins.
+        """
+        bp = self._tier_for(len(group), self.prefill_tiers)
+        bucket = self._bucket(max(len(r.prompt) for r in group))
+        ids = np.zeros((bp, bucket), np.int32)
+        rows = np.full((bp,), group[0].row, np.int32)
+        full = np.zeros((bp,), bool)
+        sent_last = np.zeros((bp,), np.int32)
+        slots = []
+        for j, req in enumerate(group):
+            n = len(req.prompt)
+            ids[j, :n] = req.prompt[:n]
+            rows[j] = req.row
+            full[j] = n == bucket
+            sent_last[j] = int(req.prompt[n - 1])
+            self._gen[req.row] = 1 if full[j] else 0
+            self.cache.lengths[req.row] = n if full[j] else n - 1
+            self.active[req.row] = req
+            if full[j]:
+                slots.append((j, req))
+            else:
+                # bucket-padded: the cache holds [0, n-1); the first
+                # decode step re-runs prompt[n-1] at position n-1 and
+                # yields the true first token (the -100 sentinel routes
+                # the harvest down the replace path).
+                req.output.append(-100)
+        fn = self._prefill_fn(bp, bucket)
+        tok, self.cache.caches, self._last_ids = fn(
+            self.params, jnp.asarray(ids), jnp.asarray(rows),
+            jnp.asarray(full), jnp.asarray(sent_last),
+            self.cache.caches, self._last_ids)
+        self._stats["prefill_steps"] += 1
+        self._stats["prefill_reqs"] += len(group)
+        if slots:
+            self._pending_prefill.append((tok, slots))
+
+    def _prefill_fn(self, bp: int, bucket: int) -> Callable:
         def build():
-            segs, _ = self.model.build_segments("prefill", 1, bucket,
+            segs, _ = self.model.build_segments("prefill", bp, bucket,
                                                 s_max=self.cfg.s_max)
-            info = ScheduleContext(local_batch=1, seq_len=bucket,
+            info = ScheduleContext(local_batch=bp, seq_len=bucket,
                                    phase="prefill", arch=self.model.cfg.name)
             fwd = build_forward(segs, self.scheduler, info,
                                 lowered=self.cfg.lowered,
                                 plan_cache=self.store if self.cfg.lowered
                                 else None,
                                 op_config=self._op_config)
+            ck = self._ck
+            bds = self.cache.batch_dims
 
-            def run(params, ids, positions):
-                return fwd(params, {"ids": ids, "positions": positions})
+            def run(params, ids, rows, full, sent_last, caches, last_ids):
+                pos = jnp.broadcast_to(jnp.arange(bucket, dtype=jnp.int32),
+                                       (bp, bucket))
+                out = fwd(params, {"ids": ids, "positions": pos})
+                tok = jnp.argmax(out["logits"][:, -1, :],
+                                 axis=-1).astype(jnp.int32)
+                caches = dict(caches)
+                li = last_ids[:, 0]
+                # reversed: padded slots (which alias rows[0]) run first,
+                # so slot 0's real write lands last and wins
+                for j in reversed(range(bp)):
+                    r = rows[j]
+                    for pk, pv, dk, dv in ck:
+                        for src, dst in ((pk, dk), (pv, dv)):
+                            val = out[src]
+                            c = caches[dst]
+                            if bds[dst]:            # stacked (L,B,S,...)
+                                slab = lax.slice_in_dim(val, j, j + 1,
+                                                        axis=1)
+                                start = (0, r) + (0,) * (c.ndim - 2)
+                            else:                   # per-layer (B,S,...)
+                                slab = lax.slice_in_dim(val, j, j + 1,
+                                                        axis=0)
+                                start = (r,) + (0,) * (c.ndim - 1)
+                            caches[dst] = lax.dynamic_update_slice(
+                                c, slab.astype(c.dtype), start)
+                    li = li.at[r].set(
+                        jnp.where(full[j], tok[j], sent_last[j]))
+                return tok, caches, li[:, None]
 
-            return jax.jit(run)
+            return _jit(run, donate=(5, 6))
 
-        return self.store.get_or_build(("prefill", bucket), build)
+        return self.store.get_or_build(("prefill", bp, bucket), build)
 
-    def _admit(self):
-        while self.waiting and self.cache.free_rows:
-            req = self.waiting[0]
-            row = self.cache.allocate(req.rid)
-            if row is None:
-                break
-            self.waiting.pop(0)
-            req.row = row
-            n = len(req.prompt)
-            bucket = self._bucket(n)
-            ids = np.zeros((1, bucket), np.int32)
-            ids[0, :n] = req.prompt[:n]
-            pos = np.arange(bucket, dtype=np.int32)[None]
-            out = self._prefill_fn(bucket)(
-                self.params, jnp.asarray(ids), jnp.asarray(pos))
-            self._stats["prefill_steps"] += 1
-            stacks = {}
-            for pk, pv, dk, dv in self._ck:
-                stacks[dk] = out[pk][..., :n, :, :] if out[pk].ndim == 5 \
-                    else out[pk][:, :n]
-                stacks[dv] = out[pv][..., :n, :, :] if out[pv].ndim == 5 \
-                    else out[pv][:, :n]
-            tok = self._sample_from_prefill(out, n, bucket)
-            # bucket-padded prompts (n < bucket): the head's last-position
-            # logits are at padding, so the first decode step re-runs the
-            # final prompt token at position n-1 (cache holds [0, n-1))
-            # and produces the true first token — the -100 sentinel routes
-            # the engine down that path.
-            self.cache.write_prefill(row, stacks, n if tok >= 0 else n - 1)
-            req.output.append(int(tok))
-            req.first_token_s = time.perf_counter()
-            self.active[row] = req
+    # -- chunked prefill --------------------------------------------------
+    def _chunk_plan(self, n: int) -> list:
+        """Chunk schedule [(offset, chunk_len)] filling the cache up to
+        position ``n - 1`` (the sentinel decode step recomputes the final
+        prompt position and yields the first token).  Chunk lengths are
+        prefill buckets so their decode-graph captures are shared; the
+        final chunk may overhang ``n - 1`` (padding is masked by
+        ``cache_len``) but must never overhang ``s_max``, where the
+        clamped cache write would corrupt earlier positions."""
+        buckets = self.cfg.prefill_buckets
+        big = buckets[-1]
+        chunks, off, target = [], 0, n - 1
+        while off < target:
+            rem = target - off
+            c = big if rem >= big else next(b for b in buckets if b >= rem)
+            if off + c > self.cfg.s_max:
+                fits = [b for b in buckets
+                        if b >= rem and off + b <= self.cfg.s_max]
+                if not fits:
+                    raise ValueError(
+                        f"prompt length {n} cannot be chunk-prefilled "
+                        f"within s_max={self.cfg.s_max} with buckets "
+                        f"{buckets}")
+                c = fits[0]
+            chunks.append((off, c))
+            off += c
+        return chunks
 
-    def _sample_from_prefill(self, out, n, bucket):
-        if n != bucket:
-            return -100    # padded: first decode step recomputes position n-1
-        return int(np.argmax(np.asarray(out["logits"][0, -1])))
+    def _admit_chunked(self, req: Request):
+        """Prompt longer than the largest bucket: run it through the
+        decode graph in chunk-sized steps (cached attention), writing KV
+        in-place per chunk.  All chunks dispatch back-to-back with no
+        host sync; the sentinel decode step then produces the first
+        token like any bucket-padded prefill."""
+        row = self.cache.allocate(req.rid)
+        req.row = row
+        prompt = np.asarray(req.prompt, np.int32)
+        n = len(prompt)
+        chunks = self._chunk_plan(n)
+        # chunks cover [0, n-1) and may fall exactly one token short of
+        # the prompt (position n-1 travels via the sentinel decode), so
+        # size the staging buffer for whichever is longer
+        padded = np.zeros(max(n, chunks[-1][0] + chunks[-1][1]), np.int32)
+        padded[:n] = prompt
+        for off, c in chunks:
+            fn = self._chunk_fn(c)
+            self.cache.caches = fn(
+                self.params, jnp.asarray(padded[off:off + c])[None],
+                jnp.asarray(off, jnp.int32), jnp.asarray(row, jnp.int32),
+                self.cache.caches)
+            self._stats["chunk_steps"] += 1
+        self._last_ids = self._last_ids.at[row, 0].set(int(prompt[n - 1]))
+        self.cache.lengths[row] = n - 1
+        self._gen[row] = 0
+        req.output.append(-100)
+        self.active[row] = req
 
-    # -- decode -----------------------------------------------------------
-    def _decode(self) -> Callable:
-        if self._decode_fn is not None:
-            return self._decode_fn
-
+    def _chunk_fn(self, chunk: int) -> Callable:
         def build():
-            segs, _ = self.model.build_segments(
-                "decode", self.cfg.max_batch, 1, s_max=self.cfg.s_max)
-            info = ScheduleContext(local_batch=self.cfg.max_batch,
-                                   seq_len=self.cfg.s_max, phase="decode",
-                                   arch=self.model.cfg.name)
+            segs, _ = self.model.build_segments("decode", 1, chunk,
+                                                s_max=self.cfg.s_max)
+            info = ScheduleContext(local_batch=1, seq_len=self.cfg.s_max,
+                                   phase="decode", arch=self.model.cfg.name)
             fwd = build_forward(segs, self.scheduler, info,
                                 lowered=self.cfg.lowered,
                                 plan_cache=self.store if self.cfg.lowered
                                 else None,
                                 op_config=self._op_config)
+            bds = self.cache.batch_dims
 
-            def run(params, ids, positions, cache_len, caches):
-                batch = {"ids": ids, "positions": positions,
-                         "cache_len": cache_len, **caches}
-                out = fwd(params, batch)
-                new_caches = {k: out[k] for k in caches}
-                return out["logits"], new_caches
+            def run(params, ids, off, row, caches):
+                pos = (off + jnp.arange(chunk, dtype=jnp.int32))[None]
+                rcaches = {k: lax.dynamic_slice_in_dim(v, row, 1,
+                                                       axis=bds[k])
+                           for k, v in caches.items()}
+                out = fwd(params, {"ids": ids, "positions": pos,
+                                   "cache_len": off[None], **rcaches})
+                return {k: lax.dynamic_update_slice_in_dim(
+                            caches[k], out[k].astype(caches[k].dtype), row,
+                            axis=bds[k])
+                        for k in caches}
 
-            return jax.jit(run)
+            return _jit(run, donate=(4,))
 
-        self._decode_fn = self.store.get_or_build(("decode",), build)
-        return self._decode_fn
+        return self.store.get_or_build(("chunk", chunk), build)
 
-    def _decode_step(self):
+    # -- decode -----------------------------------------------------------
+    def _decode_fn(self, tier: int) -> Callable:
+        def build():
+            before = dict(self.store.stats)
+            segs, _ = self.model.build_segments(
+                "decode", tier, 1, s_max=self.cfg.s_max)
+            info = ScheduleContext(local_batch=tier, seq_len=self.cfg.s_max,
+                                   phase="decode", arch=self.model.cfg.name)
+            fwd = build_forward(segs, self.scheduler, info,
+                                lowered=self.cfg.lowered,
+                                plan_cache=self.store if self.cfg.lowered
+                                else None,
+                                op_config=self._op_config)
+            st = self.store.stats
+            self._stats["tier_builds"][tier] = {
+                k: st[k] - before[k]
+                for k in ("misses", "shares", "restore_hits")}
+            bds = self.cache.batch_dims
+
+            def run(params, last_ids, cache_len, active, eos, will_end,
+                    caches):
+                ids = lax.slice_in_dim(last_ids, 0, tier, axis=0)
+                clen = lax.slice_in_dim(cache_len, 0, tier, axis=0)
+                tcaches = {k: lax.slice_in_dim(v, 0, tier, axis=bds[k])
+                           for k, v in caches.items()}
+                out = fwd(params, {"ids": ids, "positions": clen[:, None],
+                                   "cache_len": clen, **tcaches})
+                new_caches = {
+                    k: lax.dynamic_update_slice_in_dim(
+                        caches[k], out[k].astype(caches[k].dtype), 0,
+                        axis=bds[k])
+                    for k in caches}
+                tok_t = jnp.argmax(out["logits"][:, -1, :],
+                                   axis=-1).astype(jnp.int32)
+                tok = lax.dynamic_update_slice(last_ids[:, 0], tok_t, (0,))
+                tok = jnp.where(active, tok, last_ids[:, 0])
+                done = active & (will_end | (tok == eos))
+                return tok, done, tok[:, None], new_caches
+
+            return _jit(run, donate=(1, 6))
+
+        return self.store.get_or_build(("decode", tier), build)
+
+    def _compact(self, tier: int):
+        """Restore the prefix invariant: every active row < tier (cache
+        rows relocate on-device; the in-flight step, if any, ordered
+        ahead by data dependencies)."""
+        for src in sorted((r for r in self.active if r >= tier),
+                          reverse=True):
+            dst = next(r for r in self.cache.free_rows if r < tier)
+            self.cache.move_row(src, dst)
+            self._last_ids = self._last_ids.at[dst].set(self._last_ids[src])
+            self._gen[dst] = self._gen[src]
+            req = self.active.pop(src)
+            req.row = dst
+            self.active[dst] = req
+            self._stats["row_moves"] += 1
+
+    def _dispatch_decode(self):
+        """Dispatch one decode step at the smallest covering tier.
+        Returns an opaque handle ``(tok_dev, done_dev, snapshot)`` the
+        harvest consumes — in async mode one loop iteration later."""
         if not self.active:
-            return
+            return None
         B = self.cfg.max_batch
-        ids = np.zeros((B, 1), np.int32)
+        tier = self._tier_for(len(self.active), self.tiers)
+        self._compact(tier)
+        active = np.zeros((B,), bool)
+        will_end = np.zeros((B,), bool)
+        eos = np.full((B,), -1, np.int32)
+        snapshot = []
         for row, req in self.active.items():
-            last = req.output[-1] if req.output and req.output[-1] >= 0 \
-                else (req.prompt[-1] if len(req.prompt) else 0)
-            ids[row, 0] = last
-        clen = self.cache.cache_len_array()
-        pos = np.asarray(clen).reshape(B, 1).astype(np.int32)
-        logits, new_caches = self._decode()(
-            self.params, jnp.asarray(ids), jnp.asarray(pos), clen,
+            active[row] = True
+            eos[row] = req.eos_id
+            will_end[row] = (self._gen[row] + 1 >= req.max_new_tokens
+                             or self.cache.lengths[row] + 1
+                             >= self.cfg.s_max - 1)
+            snapshot.append((row, req))
+        fn = self._decode_fn(tier)
+        tok, done, self._last_ids, self.cache.caches = fn(
+            self.params, self._last_ids, self.cache.cache_len_array(),
+            jnp.asarray(active), jnp.asarray(eos), jnp.asarray(will_end),
             self.cache.caches)
-        self.cache.caches = new_caches
-        self._stats["decode_steps"] += 1
-        toks = np.asarray(jnp.argmax(logits, axis=-1)).reshape(B)
-        done_rows = []
-        for row, req in list(self.active.items()):
-            if req.output and req.output[0] == -100:
-                req.output[0] = int(toks[row])     # first real token
-            else:
-                req.output.append(int(toks[row]))
+        # host mirrors advance at dispatch, not harvest: the device's
+        # view of every row is derivable without a sync
+        for row, _ in snapshot:
             self.cache.lengths[row] += 1
+            self._gen[row] += 1
+        self._stats["decode_steps"] += 1
+        self._stats["tier_steps"][tier] += 1
+        return (tok, done, snapshot)
+
+    # -- harvest ----------------------------------------------------------
+    def _harvest(self, pending):
+        """The loop's single host sync: fetch the pending decode step's
+        token/done vectors (plus any prefill first-token vectors) in one
+        ``device_get`` and run the host bookkeeping."""
+        prefills, self._pending_prefill = self._pending_prefill, []
+        if pending is None and not prefills:
+            return
+        fetch = list(pending[:2]) if pending is not None else []
+        fetch.extend(t for t, _ in prefills)
+        vals = jax.device_get(fetch)
+        self._stats["host_syncs"] += 1
+        now = time.perf_counter()
+        i = 2 if pending is not None else 0
+        # prefill first: in sync mode the same harvest also carries the
+        # first decode step of the just-admitted rows
+        for (_, slots), toks in zip(prefills, vals[i:]):
+            for j, req in slots:
+                if req.done_s:
+                    continue
+                req.output.append(int(toks[j]))
+                req.first_token_s = now
+                if (len(req.output) >= req.max_new_tokens
+                        or req.output[-1] == req.eos_id):
+                    self._finish(req, now)
+        if pending is None:
+            return
+        tok, done, snapshot = np.asarray(vals[0]), np.asarray(vals[1]), \
+            pending[2]
+        for row, req in snapshot:
+            if req.done_s:       # finished by an earlier harvest: the
+                continue         # in-flight step decoded a stale row
+            t = int(tok[row])
+            if req.output and req.output[0] == -100:
+                req.output[0] = t          # sentinel: first real token
+                if not req.first_token_s:
+                    req.first_token_s = now
+            else:
+                req.output.append(t)
             self._stats["decode_tokens"] += 1
-            if (len(req.output) >= req.max_new_tokens
-                    or req.output[-1] == req.eos_id
-                    or self.cache.lengths[row] >= self.cfg.s_max - 1):
-                done_rows.append(row)
-        for row in done_rows:
-            req = self.active.pop(row)
-            req.done_s = time.perf_counter()
-            self.finished.append(req)
-            self.cache.release(row)
+            if done[row]:
+                self._finish(req, now)
+
+    def _finish(self, req: Request, now: float):
+        req.done_s = now
+        self.active.pop(req.row, None)
+        self.cache.release(req.row)
+        self._gen[req.row] = 0
+        self.finished.append(req)
 
     # -- cache key mapping --------------------------------------------------
     def _cache_keys(self):
@@ -271,3 +597,11 @@ class ServeEngine:
             out.append((pk, pv, imap.get("k_cache", "k_cache"),
                         imap.get("v_cache", "v_cache")))
         return out
+
+
+def _jit(fn, donate: tuple = ()):
+    """jit with buffer donation where the backend supports it (donation
+    is a no-op warning on CPU, so skip it there to keep test logs clean)."""
+    if donate and jax.default_backend() != "cpu":
+        return jax.jit(fn, donate_argnums=donate)
+    return jax.jit(fn)

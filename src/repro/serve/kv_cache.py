@@ -1,17 +1,26 @@
-"""KV-cache slot manager for the batched serving engine.
+"""KV-cache slot manager for the tiered batched serving engine.
 
 A fixed pool of ``max_batch`` rows per cache tensor (the model's
 ``decode_cache_env`` layout).  Requests are assigned rows on admission and
-release them on completion — continuous batching over a static-shape
-decode step (the compiled executable never changes shape).
+release them on completion — continuous batching over static-shape decode
+steps.  The tiered engine keeps the **prefix invariant**: active rows are
+compacted into the lowest-numbered slots so a decode step at batch tier
+``t`` only touches rows ``[0, t)`` of the pool (sliced and written back
+*inside* the jitted step; the manager itself never copies cache data
+host-side).
+
+``lengths`` is the host-side mirror of per-row cache occupancy.  The
+engine advances it deterministically at dispatch time (prefill sets it,
+every decode step increments the active rows), so the device never has to
+be synced to know where a row's history ends.
 """
 from __future__ import annotations
 
 from typing import Optional
 
-import jax
 import jax.numpy as jnp
 import numpy as np
+from jax import lax
 
 
 class KVCacheManager:
@@ -21,6 +30,10 @@ class KVCacheManager:
         self.caches = {k: jnp.zeros(v.shape, v.dtype)
                        for k, v in model.decode_cache_env(
                            max_batch, s_max).items()}
+        layout = model.decode_cache_layout()
+        # which dim of each cache tensor is the request-batch dim (0 for
+        # per-layer tensors, 1 for (L, B, ...) stacked scan caches)
+        self.batch_dims = {k: layout[k][0] for k in self.caches}
         self.lengths = np.zeros((max_batch,), np.int32)
         self.free_rows = list(range(max_batch))
         self.row_owner: dict[int, int] = {}    # row -> request id
@@ -40,25 +53,31 @@ class KVCacheManager:
         self.free_rows.append(row)
         self.free_rows.sort()
 
+    def move_row(self, src: int, dst: int):
+        """Relocate a request's cache rows ``src -> dst`` (tier-shrink
+        compaction).  Device-side: one slice + one dynamic_update_slice
+        per cache tensor, dispatched asynchronously — the copies order
+        behind any in-flight step through data dependencies."""
+        assert dst in self.free_rows and src in self.row_owner, (src, dst)
+        for k, c in self.caches.items():
+            bd = self.batch_dims[k]
+            row = lax.slice_in_dim(c, src, src + 1, axis=bd)
+            self.caches[k] = lax.dynamic_update_slice_in_dim(
+                c, row, dst, axis=bd)
+        self.lengths[dst] = self.lengths[src]
+        self.lengths[src] = 0
+        self.row_owner[dst] = self.row_owner.pop(src)
+        self.free_rows.remove(dst)
+        self.free_rows.append(src)
+        self.free_rows.sort()
+
     @property
     def active_rows(self) -> list:
         return sorted(self.row_owner)
 
     # -- data -------------------------------------------------------------
-    def write_prefill(self, row: int, stacks: dict, length: int):
-        """Write prefilled K/V ([L,]1,S,kv,hd) into the row's cache slots."""
-        for key, val in stacks.items():
-            cache = self.caches[key]
-            stacked = cache.ndim == val.ndim        # (L,B,S,...) vs (L,1,S,..)
-            if stacked:
-                cache = jax.lax.dynamic_update_slice(
-                    cache, val.astype(cache.dtype),
-                    (0, row, 0, 0, 0))
-            else:
-                cache = jax.lax.dynamic_update_slice(
-                    cache, val[0].astype(cache.dtype), (row, 0, 0, 0))
-            self.caches[key] = cache
-        self.lengths[row] = length
-
     def cache_len_array(self) -> jnp.ndarray:
-        return jnp.asarray(self.lengths)
+        # snapshot, never alias: on CPU jnp.asarray can zero-copy the
+        # numpy buffer, and the async engine mutates ``lengths`` while
+        # the dispatched step is still consuming it
+        return jnp.asarray(self.lengths.copy())

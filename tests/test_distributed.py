@@ -342,3 +342,40 @@ def test_ff_sharded_experts_match_dense_experts():
                                    atol=1e-4, rtol=1e-4)
         print("ff-sharded experts OK")
     """)
+
+
+def test_decode_tier_steps_share_one_lowering_tp2():
+    """build_global_decode_tiers under a tp=2 mesh: one canonical decode
+    lowering, every further batch tier a PlanStore share — the launch
+    layer's half of the tiered-serve story."""
+    run_devices(2, """
+        import jax
+        from repro.configs import get_smoke_config
+        from repro.configs.base import ShapeConfig
+        from repro.core import PlanStore
+        from repro.core.strategies import get_strategy
+        from repro.launch.steps import build_global_decode_tiers
+        from repro.models.layers import MeshInfo
+        from repro.models.registry import build_model
+
+        mesh = jax.make_mesh((1, 2), ("data", "model"),
+                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        cfg = get_smoke_config("chatglm3-6b")
+        model = build_model(cfg, MeshInfo(tp=2, dp=1))
+        store = PlanStore()
+        shape = ShapeConfig("decode_smoke", seq_len=32, global_batch=4,
+                            kind="decode")
+        tiers = build_global_decode_tiers(model, get_strategy("sequential"),
+                                          shape, mesh, plan_store=store)
+        assert set(tiers) == {1, 2, 4}, sorted(tiers)
+        st = store.stats
+        # first tier lowers each segment once; tiers 2 and 4 specialize
+        assert st["misses"] == 3, st
+        assert st["shares"] == 6, st
+        # the derived-tier step must actually compile and keep its
+        # tier-sized global batch
+        fn, in_sdss, _, donate, _ = tiers[2]
+        assert in_sdss[1]["ids"].shape == (2, 1), in_sdss[1]["ids"].shape
+        jax.jit(fn).lower(*in_sdss).compile()
+        print("decode tiers OK")
+    """)

@@ -165,7 +165,9 @@ def test_specialize_rejects_structural_mismatch():
 
 
 def test_split_count_is_structural():
-    """Same graph, different micro-batch *count*: never shared."""
+    """Same graph, different micro-batch *count*: never shared.  (The
+    decode-tier analogue: a batch tier whose scheduler changes the split
+    count becomes its own canonical instead of specializing.)"""
     net = Chain()
     g1, p1, *_ = _bucket(net, 8, (4, 4))
     g2, p2, *_ = _bucket(net, 9, (3, 3, 3))
@@ -175,6 +177,28 @@ def test_split_count_is_structural():
     store.get_or_lower(g2, p2)
     assert store.stats["misses"] == 2
     assert store.stats["shares"] == 0
+    # distinct outer keys never reach the specialize attempt
+    assert store.stats["specialize_rejects"] == 0
+
+
+def test_specialize_fallback_is_counted(monkeypatch):
+    """When a canonical exists but specialize rejects (structure drift),
+    the store falls back to a cold lower and counts the reject."""
+    from repro.core import plan_store as plan_store_mod
+    net = Chain()
+    store = PlanStore()
+    g1, p1, *_ = _bucket(net, 8, (4, 4))
+    store.get_or_lower(g1, p1)
+
+    def always_reject(*a, **k):
+        raise LoweringError("forced drift")
+    monkeypatch.setattr(plan_store_mod, "specialize", always_reject)
+    g2, p2, params, x = _bucket(net, 16, (8, 8))
+    lowered = store.get_or_lower(g2, p2)
+    assert store.stats["specialize_rejects"] == 1
+    assert store.stats["misses"] == 2           # fell back to a cold lower
+    _assert_same(Realizer(g2, p2, lowered=False)(params, {"x": x}),
+                 lowered(params, {"x": x}))
 
 
 def test_fused_closure_config_scopes_outer_key():

@@ -85,17 +85,23 @@ def test_executable_cache_reuse(engine_setup):
         eng.submit(Request(rid=i, prompt=rng.integers(
             0, 100, 10).astype(np.int32), max_new_tokens=4))
     eng.run()
-    # one prefill build (one bucket) + one decode build; rest are hits
-    assert eng.store.stats["exec_misses"] <= 2
-    assert eng.store.stats["exec_hits"] >= 5
+    st = eng.store.stats
+    # every executable build is one (phase, tier/bucket) capture; the
+    # steady state replays them: a run of 6 requests over 2 admission
+    # waves must hit far more often than it builds
+    assert st["exec_misses"] <= 1 + len(eng.prefill_tiers) + len(eng.tiers)
+    assert st["exec_hits"] >= st["exec_misses"]
+    # and every non-canonical plan bucket came from specialize, not lower
+    assert st["misses"] <= 3 * 2, st    # 3 segments x (prefill, decode)
 
 
 def test_cross_bucket_plan_share(engine_setup):
-    """Second prefill bucket must not re-lower: its segment plans are
-    structurally identical to the first bucket's, so the PlanStore serves
-    them via fingerprint-v2 specialization (counted as shares)."""
+    """Later prefill buckets and smaller decode tiers must not re-lower:
+    their segment plans are structurally identical to the first bucket's
+    / the first tier's, so the PlanStore serves them via fingerprint-v2
+    specialization (counted as shares)."""
     cfg, model, params = engine_setup
-    eng = make_engine(model, params)
+    eng = make_engine(model, params, prefill_batch=1)
     rng = np.random.default_rng(2)
     eng.submit(Request(rid=0, prompt=rng.integers(0, 100, 10)
                        .astype(np.int32), max_new_tokens=3))   # bucket 16
@@ -104,8 +110,8 @@ def test_cross_bucket_plan_share(engine_setup):
     done = eng.run()
     assert len(done) == 2
     st = eng.store.stats
-    # bucket 1 (+ the decode build) pays the lowering; bucket 2 shares all
-    # of its segment plans off bucket 1's canonical lowerings
+    # the second prefill bucket and every decode tier after the first
+    # share their segment plans off the canonical lowerings
     assert st["shares"] >= 3, st
     assert eng.store.share_rate > 0
     # eviction stats surface through engine metrics

@@ -1,0 +1,288 @@
+"""Tiered serve runtime tests: batch-tier capture sharing, chunked
+prefill, compaction, and the async host loop's sync discipline."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.core import PlanStore
+from repro.core.scheduler import OpSchedulerBase, ScheduleContext
+from repro.core.strategies import get_strategy
+from repro.models.base import build_forward
+from repro.models.layers import MeshInfo
+from repro.models.registry import build_model
+from repro.serve import Request, ServeConfig, ServeEngine
+from repro.serve.engine import pow2_tiers
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = get_smoke_config("chatglm3-6b")
+    model = build_model(cfg, MeshInfo(tp=1, dp=1))
+    segs, _ = model.build_segments("prefill", 1, 32, s_max=64)
+    params = model._init_from_segments(segs, jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+def make_engine(model, params, **kw):
+    kw.setdefault("max_batch", 4)
+    kw.setdefault("s_max", 64)
+    kw.setdefault("prefill_buckets", (16, 32))
+    return ServeEngine(model, params, get_strategy("sequential"),
+                       ServeConfig(**kw))
+
+
+def _decode_fwd(model, cfg, tier, store, s_max=64):
+    segs, _ = model.build_segments("decode", tier, 1, s_max=s_max)
+    info = ScheduleContext(local_batch=tier, seq_len=s_max, phase="decode",
+                           arch=cfg.name)
+    return build_forward(segs, OpSchedulerBase(), info, lowered=True,
+                        plan_cache=store,
+                        op_config=model.op_closure_config())
+
+
+def test_pow2_tiers():
+    assert pow2_tiers(8) == (1, 2, 4, 8)
+    assert pow2_tiers(6) == (1, 2, 4, 6)
+    assert pow2_tiers(1) == (1,)
+
+
+# -- tier specialization ----------------------------------------------------
+
+def test_tier_specialization_differential(setup):
+    """Decode at tier t is bitwise-identical to the fixed max_batch
+    decode restricted to the same rows — the specialized lowering only
+    rewrites the batch dimension, never the per-row math."""
+    cfg, model, params = setup
+    store = PlanStore()
+    rng = np.random.default_rng(0)
+    caches8 = {k: jnp.asarray(
+        rng.standard_normal(v.shape).astype(np.float32), v.dtype)
+        for k, v in model.decode_cache_env(8, 64).items()}
+    ids = jnp.asarray(rng.integers(0, cfg.vocab, (8, 1)), jnp.int32)
+    clen = jnp.asarray(rng.integers(1, 10, (8,)), jnp.int32)
+    layout = model.decode_cache_layout()
+
+    fwd8 = _decode_fwd(model, cfg, 8, store)     # canonical
+    out8 = fwd8(params, {"ids": ids, "positions": clen[:, None],
+                         "cache_len": clen, **caches8})
+    for tier in (1, 2, 4):
+        fwdt = _decode_fwd(model, cfg, tier, store)   # specialized
+        tcaches = {k: jax.lax.slice_in_dim(v, 0, tier, axis=layout[k][0])
+                   for k, v in caches8.items()}
+        outt = fwdt(params, {"ids": ids[:tier],
+                             "positions": clen[:tier, None],
+                             "cache_len": clen[:tier], **tcaches})
+        np.testing.assert_array_equal(
+            np.asarray(out8["logits"])[:tier], np.asarray(outt["logits"]))
+    st = store.stats
+    assert st["misses"] == 3, st      # only the canonical tier lowered
+    assert st["shares"] == 9, st      # 3 segments x 3 derived tiers
+
+
+def test_tiers_share_one_canonical_capture(setup, monkeypatch):
+    """Tiers 2..N must count as PlanStore shares — zero extra lower()
+    calls beyond the canonical tier's."""
+    cfg, model, params = setup
+    store = PlanStore()
+    _decode_fwd(model, cfg, 4, store)
+    lowered_canonical = store.stats["misses"]
+    from repro.core import plan_store as plan_store_mod
+
+    def bomb(*a, **k):
+        raise AssertionError("a non-canonical tier re-lowered")
+    monkeypatch.setattr(plan_store_mod, "lower", bomb)
+    for tier in (1, 2):
+        _decode_fwd(model, cfg, tier, store)
+    st = store.stats
+    assert st["misses"] == lowered_canonical
+    assert st["shares"] == 2 * lowered_canonical, st
+
+
+def test_tiers_round_trip_persistent_artifact(setup, tmp_path, monkeypatch):
+    """A persisted canonical decode capture serves every tier after a
+    restart: the seen tier redeems (restore hit), unseen tiers
+    specialize the rehydrated skeleton — never a cold lower."""
+    cfg, model, params = setup
+    path = str(tmp_path / "tiers.dfps")
+    store = PlanStore(path=path)
+    _decode_fwd(model, cfg, 4, store)
+    assert store.save() >= 1
+
+    from repro.core import plan_store as plan_store_mod
+
+    def bomb(*a, **k):
+        raise AssertionError("restarted process re-lowered a tier")
+    monkeypatch.setattr(plan_store_mod, "lower", bomb)
+    store2 = PlanStore.open(path)
+    _decode_fwd(model, cfg, 4, store2)           # seen tier: restore hits
+    assert store2.stats["restore_hits"] == 3, store2.stats
+    _decode_fwd(model, cfg, 2, store2)           # unseen tier: shares
+    st = store2.stats
+    assert st["misses"] == 0, st
+    assert st["shares"] == 3, st
+
+
+def test_engine_tier_selection_and_compaction(setup):
+    """Mixed-lifetime batch: the engine shrinks tiers as requests finish,
+    compacts surviving rows into the tier prefix, and still produces the
+    exact tokens each request would get running alone."""
+    cfg, model, params = setup
+    rng = np.random.default_rng(3)
+    prompts = [rng.integers(0, 100, n).astype(np.int32)
+               for n in (6, 9, 12, 7)]
+    max_new = [2, 2, 8, 8]
+
+    eng = make_engine(model, params)
+    for i, (pr, mn) in enumerate(zip(prompts, max_new)):
+        eng.submit(Request(rid=i, prompt=pr.copy(), max_new_tokens=mn))
+    done = {r.rid: r.output for r in eng.run()}
+    st = eng.stats
+    # all four started at tier 4; the two short requests finished and the
+    # survivors (rows 2, 3) were compacted down into a smaller tier
+    assert st["tier_steps"][4] > 0
+    assert sum(v for t, v in st["tier_steps"].items() if t < 4) > 0, st
+    assert st["row_moves"] > 0, st
+
+    for i, (pr, mn) in enumerate(zip(prompts, max_new)):
+        solo = make_engine(model, params)
+        solo.submit(Request(rid=0, prompt=pr.copy(), max_new_tokens=mn))
+        want = solo.run()[0].output
+        assert done[i] == want, f"request {i} diverged under tiering"
+
+
+# -- batched + chunked prefill ----------------------------------------------
+
+def test_batched_prefill_packs_requests(setup):
+    cfg, model, params = setup
+    eng = make_engine(model, params, prefill_batch=4)
+    rng = np.random.default_rng(4)
+    for i in range(4):
+        eng.submit(Request(rid=i, prompt=rng.integers(0, 100, 10)
+                           .astype(np.int32), max_new_tokens=3))
+    done = eng.run()
+    assert len(done) == 4
+    st = eng.stats
+    assert st["prefill_steps"] == 1, st     # one call admits all four
+    assert st["prefill_reqs"] == 4, st
+
+
+def test_old_prefill_failure_shape_is_pinned():
+    """The pre-tiered engine crashed on prompts longer than the largest
+    bucket with a raw numpy broadcast error at ``ids[0, :n] = prompt``;
+    chunked prefill makes that a supported path, and with chunking
+    disabled the engine now rejects at submit() with a typed error."""
+    prompt = np.arange(40, dtype=np.int32)
+    ids = np.zeros((1, 32), np.int32)
+    with pytest.raises(ValueError):         # the old failure shape
+        ids[0, :40] = prompt[:40]
+
+
+def test_chunked_prefill_disabled_rejects(setup):
+    cfg, model, params = setup
+    eng = make_engine(model, params, chunked_prefill=False)
+    with pytest.raises(ValueError, match="largest prefill bucket"):
+        eng.submit(Request(rid=0, prompt=np.arange(40, dtype=np.int32),
+                           max_new_tokens=2))
+
+
+def test_chunked_prefill_matches_offline(setup):
+    """A prompt longer than every bucket runs as chunked prefill through
+    the decode graph and must match the offline greedy reference."""
+    cfg, model, params = setup
+    pr = (np.arange(40, dtype=np.int32) * 7 + 3) % 100
+    eng = make_engine(model, params)
+    eng.submit(Request(rid=0, prompt=pr.copy(), max_new_tokens=3))
+    got = eng.run()[0].output
+    assert eng.stats["chunk_steps"] >= 2, eng.stats
+
+    ids = list(pr)
+    want = []
+    for _ in range(3):
+        n = len(ids)
+        segs, _ = model.build_segments("prefill", 1, n, s_max=64)
+        fwd = build_forward(segs, OpSchedulerBase(),
+                            ScheduleContext(local_batch=1, seq_len=n,
+                                            phase="prefill", arch=cfg.name))
+        out = fwd(params, {
+            "ids": jnp.asarray(ids, jnp.int32)[None],
+            "positions": jnp.arange(n, dtype=jnp.int32)[None]})
+        nxt = int(jnp.argmax(out["logits"][0, -1]))
+        want.append(nxt)
+        ids.append(nxt)
+    assert got == want
+
+
+def test_chunk_coverage_exactly_one_short_of_prompt(setup):
+    """n-1 an exact sum of chunk buckets (n=33 with buckets (16,32)):
+    the chunks cover one token fewer than the prompt, so the staging
+    buffer must be sized to the prompt, not the coverage."""
+    cfg, model, params = setup
+    pr = (np.arange(33, dtype=np.int32) * 5 + 1) % 100
+    eng = make_engine(model, params)
+    eng.submit(Request(rid=0, prompt=pr.copy(), max_new_tokens=2))
+    got = eng.run()[0].output
+    assert len(got) == 2 and all(t >= 0 for t in got)
+
+
+def test_oversized_prompt_rejected(setup):
+    cfg, model, params = setup
+    eng = make_engine(model, params)
+    with pytest.raises(ValueError, match="s_max"):
+        eng.submit(Request(rid=0, prompt=np.zeros(64, np.int32),
+                           max_new_tokens=2))
+
+
+# -- async host loop --------------------------------------------------------
+
+def test_async_loop_one_sync_per_decode_iteration(setup):
+    """The double-buffered loop must fetch at most one small vector per
+    decode iteration — never a per-token np.asarray sync."""
+    cfg, model, params = setup
+    eng = make_engine(model, params)
+    rng = np.random.default_rng(5)
+    for i in range(6):
+        eng.submit(Request(rid=i, prompt=rng.integers(
+            0, 100, int(rng.integers(4, 14))).astype(np.int32),
+            max_new_tokens=5))
+    done = eng.run()
+    assert len(done) == 6
+    st = eng.stats
+    assert st["host_syncs"] <= st["decode_steps"] + 2, st
+
+
+def test_async_and_sync_loops_agree(setup):
+    cfg, model, params = setup
+    rng = np.random.default_rng(6)
+    prompts = [rng.integers(0, 100, int(rng.integers(4, 30)))
+               .astype(np.int32) for _ in range(5)]
+
+    outs = []
+    for async_host in (True, False):
+        eng = make_engine(model, params, async_host=async_host)
+        for i, pr in enumerate(prompts):
+            eng.submit(Request(rid=i, prompt=pr.copy(), max_new_tokens=4))
+        outs.append({r.rid: r.output for r in eng.run()})
+    assert outs[0] == outs[1]
+
+
+def test_baseline_config_recovers_fixed_batch(setup):
+    """decode_tiers=(max_batch,) + prefill_batch=1 + async_host=False is
+    the synchronous fixed-batch baseline; it must agree with the tiered
+    async engine token-for-token."""
+    cfg, model, params = setup
+    rng = np.random.default_rng(7)
+    prompts = [rng.integers(0, 100, int(rng.integers(4, 14)))
+               .astype(np.int32) for _ in range(4)]
+
+    base = make_engine(model, params, decode_tiers=(4,), prefill_batch=1,
+                       async_host=False)
+    tier = make_engine(model, params)
+    for eng in (base, tier):
+        for i, pr in enumerate(prompts):
+            eng.submit(Request(rid=i, prompt=pr.copy(), max_new_tokens=4))
+    b = {r.rid: r.output for r in base.run()}
+    t = {r.rid: r.output for r in tier.run()}
+    assert b == t
+    assert base.stats["tier_steps"] == {4: base.stats["decode_steps"]}
