@@ -5,9 +5,26 @@ and scheduler logic.  Table 1: LoC the model definitions needed to become
 DynaFlow-schedulable (the `mark(...)` annotations + Op subclassing deltas,
 counted as annotation call sites — the framework integration itself is
 the core library, shared by every model).
+
+Since PR 5 the integration-cost claim is *enforceable*: every example
+driver's LoC is measured against a checked-in budget
+(``benchmarks/loc_budget.csv``) and CI's ``loc-gate`` job fails when an
+example regresses past it — if the facade ever stops being a facade, the
+gate says so.  ``--check`` also asserts the flagship examples go through
+``repro.api.compile`` with none of the pre-facade entry points.
 """
 import inspect
+import os
 import re
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+EXAMPLES = ("examples/quickstart.py", "examples/serve_batched.py",
+            "examples/custom_strategy.py", "examples/train_ft.py")
+# pre-facade entry points the flagship examples must not touch
+BANNED = ("record_plan(", "build_global_", "PlanStore.open(",
+          "build_train_step(")
+FACADE_ONLY = ("examples/quickstart.py", "examples/serve_batched.py")
 
 
 def _loc(src: str) -> int:
@@ -51,14 +68,75 @@ def annotation_rows():
     return rows
 
 
+def example_rows():
+    """Integration LoC of each example driver — what a user writes to go
+    from model to scheduled execution, demo scaffolding included."""
+    rows = []
+    for rel in EXAMPLES:
+        with open(os.path.join(REPO, rel)) as f:
+            rows.append((rel, _loc(f.read())))
+    return rows
+
+
+def read_budget(path):
+    out = {}
+    with open(path) as f:
+        for line in f:
+            line = line.strip()
+            if not line or line.startswith("#"):
+                continue
+            rel, budget = line.split(",")
+            out[rel] = int(budget)
+    return out
+
+
+def check(budget_path) -> int:
+    """Gate: every example within its LoC budget, flagship examples
+    facade-only.  Returns a shell exit code."""
+    budget = read_budget(budget_path)
+    failures = []
+    for rel, loc in example_rows():
+        cap = budget.get(rel)
+        if cap is None:
+            failures.append(f"{rel}: no budget entry in {budget_path}")
+        elif loc > cap:
+            failures.append(
+                f"{rel}: {loc} LoC exceeds budget {cap} — the facade "
+                "stopped covering this workflow (or raise the budget "
+                "with justification)")
+        else:
+            print(f"loc-gate OK {rel}: {loc} <= {cap}")
+    for rel in FACADE_ONLY:
+        with open(os.path.join(REPO, rel)) as f:
+            src = f.read()
+        hits = [b for b in BANNED if b in src]
+        if hits:
+            failures.append(
+                f"{rel}: uses pre-facade entry points {hits}; route "
+                "through repro.api.compile")
+        elif "api.compile(" not in src:
+            failures.append(f"{rel}: does not call repro.api.compile")
+        else:
+            print(f"loc-gate OK {rel}: facade-only")
+    for msg in failures:
+        print(f"loc-gate FAIL {msg}")
+    return 1 if failures else 0
+
+
 def run():
     out = []
     for label, part, sched in strategy_rows():
         out.append(f"loc/{label},partition={part},scheduler={sched}")
     for label, marks in annotation_rows():
         out.append(f"annotations/{label},mark_sites={marks},")
+    for rel, loc in example_rows():
+        out.append(f"integration/{rel},loc={loc},")
     return out
 
 
 if __name__ == "__main__":
+    if len(sys.argv) > 1 and sys.argv[1] == "--check":
+        path = sys.argv[2] if len(sys.argv) > 2 else os.path.join(
+            REPO, "benchmarks", "loc_budget.csv")
+        sys.exit(check(path))
     print("\n".join(run()))

@@ -5,10 +5,17 @@ real deepseek-moe layer graph, then scores it with the plan-level overlap
 model against the built-in strategies — the paper's rapid-prototyping
 workflow (§5.3.5: Flux was validated and REJECTED the same way).
 
+Since PR 5 the selection is programmable too: the last section wraps
+MyDBO in a ``StrategyPolicy`` (~8 lines) so it only fires on large MoE
+prefill buckets and every other context falls through to cheap built-ins
+— the paper's "dynamic" headline as user code.
+
 Run:  PYTHONPATH=src python examples/custom_strategy.py
 """
 from repro.configs import get_config
-from repro.core import Mark, OpSchedulerBase, partition, record_plan
+from repro.core import (Mark, OpSchedulerBase, by_phase,
+                        by_token_threshold, first_viable, has_ops,
+                        partition, record_plan, resolve_strategy, when)
 from repro.core.plan import OpHandle
 from repro.core.scheduler import ScheduleContext
 from repro.core.strategies import get_strategy
@@ -84,8 +91,34 @@ def main():
         speed = (results["sequential"].t_overlapped
                  / results["mine"].t_overlapped)
         print(f"MyDBO modeled speedup vs sequential: {speed:.3f}x")
-    print("custom_strategy OK — 20 lines of user Python, validated "
-          "before touching a TPU")
+
+    # ---- context-conditional selection: MyDBO as a StrategyPolicy ------
+    # 8 lines turn the scheduler into a policy: large MoE prefill buckets
+    # get MyDBO, small ones SBO, decode always sequential.  The policy
+    # drops straight into repro.api.compile(..., policy=my_policy) and
+    # its identity salts the PlanStore, so swapping it never replays a
+    # stale plan.
+    my_policy = by_phase(
+        decode=get_strategy("sequential"),
+        default=by_token_threshold(
+            [(2048, get_strategy("sbo"))],
+            above=first_viable(when(has_ops(r"moe_a2a|expert_ffn"),
+                                    MyDBO()),
+                               default=get_strategy("nanoflow"))))
+    print("\npolicy resolution per context:")
+    for phase, b, s in (("prefill", 8, 2048), ("prefill", 2, 128),
+                        ("decode", 8, 1)):
+        ctx = ScheduleContext(local_batch=b, seq_len=s, phase=phase,
+                              arch=cfg.name)
+        sched = resolve_strategy(my_policy, ctx, graph=seg.graph)
+        print(f"  {phase:8s} B={b:2d} S={s:5d} -> "
+              f"{type(sched).__name__}")
+    assert isinstance(resolve_strategy(
+        my_policy, ScheduleContext(local_batch=8, seq_len=2048,
+                                   phase="prefill", arch=cfg.name),
+        graph=seg.graph), MyDBO)
+    print("custom_strategy OK — 20 lines of user Python + an 8-line "
+          "policy, validated before touching a TPU")
 
 
 if __name__ == "__main__":

@@ -3,7 +3,9 @@
 1. Write a model as plain sequential Modules/Ops (no scheduling logic).
 2. Trace it into an OpGraph; partition with annotations (Fig. 5 APIs).
 3. Write a scheduler in ~15 lines of Python (Fig. 6 APIs).
-4. Realize: any valid schedule computes exactly the same result.
+4. Compile: ``repro.api.compile`` turns (model, policy) into a Program —
+   any valid schedule computes exactly the same result, and the Program
+   owns plan recording, lowering and caching behind one call.
 
 Run:  PYTHONPATH=src python examples/quickstart.py
 """
@@ -11,8 +13,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import (Mark, OpSchedulerBase, ScheduleContext, partition,
-                        realize, record_plan, sequential_plan, trace)
+import repro
+from repro.core import Mark, OpSchedulerBase, partition, trace
 from repro.core.module import Module, Op, Param, mark
 
 
@@ -71,7 +73,8 @@ class TwoBranchModel(Module):
 # ---- 2. trace + partition --------------------------------------------------
 
 model = TwoBranchModel()
-graph = trace(model, {"x": jax.ShapeDtypeStruct((8, 32), jnp.float32)})
+example = {"x": jax.ShapeDtypeStruct((8, 32), jnp.float32)}
+graph = trace(model, example)
 print("captured operator graph:")
 print(graph.pretty())
 
@@ -103,16 +106,22 @@ class SplitBatch(OpSchedulerBase):
 
 
 # ---- 4. every schedule computes the same function --------------------------
+# repro.api.compile is the whole integration: model (or traced graph) +
+# policy in, a Program out — plan recording, lowering and the PlanStore
+# are its problem, not the user's.
 
 params = model.init(jax.random.PRNGKey(0))
 x = jax.random.normal(jax.random.PRNGKey(1), (8, 32))
-want = realize(graph, sequential_plan(graph), params, {"x": x})["out"]
+baseline = repro.api.compile(model, policy="sequential",
+                             example_inputs=example)
+want = baseline(params, {"x": x})["out"]
 
 for sched in (OverlapFirst(), SplitBatch()):
-    plan = record_plan(graph, sched, ScheduleContext(local_batch=8))
+    program = repro.api.compile(model, policy=sched,
+                                example_inputs=example)
     print(f"\n{type(sched).__name__} plan:")
-    print(plan.pretty())
-    got = realize(graph, plan, params, {"x": x})["out"]
+    print(program.plan(local_batch=8).pretty())
+    got = program(params, {"x": x})["out"]
     np.testing.assert_allclose(got, want, atol=1e-5)
     print("=> output identical to sequential execution")
 

@@ -1,9 +1,12 @@
 """End-to-end serving driver: batched requests through the DynaFlow engine.
 
-Serves a (smoke-sized) chatglm3 with bucketed prefill, continuous-batching
-decode, and the dynamic scheduler choosing per-bucket plans — the paper's
-deployment story in miniature.  Afterwards the server is "restarted": a
-second engine warm-starts from the persisted PlanStore and serves its
+The whole integration is one ``repro.api.compile`` call: arch + strategy
+policy + plan-store path in, a Program out whose ``serve()`` owns the
+engine, the schedule contexts and the PlanStore lifecycle.  Serves a
+(smoke-sized) chatglm3 with bucketed prefill, continuous-batching decode,
+and the dynamic policy choosing per-bucket plans — the paper's deployment
+story in miniature.  Afterwards the server is "restarted": a second
+Program compiled against the same store path warm-starts and serves its
 first request without re-lowering a single plan (restore hits + shares
 only — the cross-process half of the capture/replay story).
 
@@ -14,14 +17,10 @@ import os
 import tempfile
 import time
 
-import jax
 import numpy as np
 
-from repro.configs import get_smoke_config
-from repro.core.strategies import get_strategy
-from repro.models.layers import MeshInfo
-from repro.models.registry import build_model
-from repro.serve import Request, ServeConfig, ServeEngine
+import repro
+from repro.serve import Request, ServeConfig
 
 
 def main():
@@ -34,23 +33,22 @@ def main():
                     help="persist lowered plans here (default: a temp file)")
     args = ap.parse_args()
 
-    cfg = get_smoke_config(args.arch)
-    model = build_model(cfg, MeshInfo(tp=1, dp=1))
-    segs, _ = model.build_segments("prefill", 1, 32, s_max=128)
-    params = model._init_from_segments(segs, jax.random.PRNGKey(0))
-
     store_path = args.plan_store or os.path.join(
         tempfile.mkdtemp(prefix="dynaflow-"), "plan_store.dfps")
     serve_cfg = ServeConfig(max_batch=8, s_max=128,
-                            prefill_buckets=(16, 32, 64),
-                            plan_store_path=store_path)
-    eng = ServeEngine(model, params, get_strategy(args.strategy), serve_cfg)
+                            prefill_buckets=(16, 32, 64))
+
+    program = repro.api.compile(args.arch, policy=args.strategy,
+                                smoke=True, plan_store_path=store_path)
+    params = program.init_params(0)
+    eng = program.serve(params, serve_cfg)
+    vocab = program.model.cfg.vocab
     rng = np.random.default_rng(0)
     t0 = time.perf_counter()
     for i in range(args.requests):
         n = int(rng.integers(4, 50))
         eng.submit(Request(rid=i,
-                           prompt=rng.integers(0, cfg.vocab, n,
+                           prompt=rng.integers(0, vocab, n,
                                                dtype=np.int32),
                            max_new_tokens=args.max_new))
     done = eng.run()
@@ -67,29 +65,32 @@ def main():
           f"({st['host_syncs']} host syncs / {st['decode_steps']} decode "
           f"steps, {st['chunk_steps']} chunk steps)")
     print(f"engine stats: {st}")
-    ps = eng.store.snapshot()
+    ps = program.stats
     print(f"plan store: {ps['exec_misses']} builds, {ps['exec_hits']} "
           f"replays (the CUDA-graph-capture analogue); "
           f"{ps['misses']} lowered, {ps['shares']} shared across buckets "
           f"(share rate {ps['share_rate']:.0%})")
     assert all(len(r.output) == args.max_new for r in done)
     eng.shutdown()
+    program.close()
 
     # -- "restart" the server: warm-start from the persisted PlanStore ----
-    # A fresh engine (fresh process in production) restores the canonical
-    # lowerings and serves its first request with zero lower() calls.
+    # A fresh Program (fresh process in production) compiled against the
+    # same store path restores the canonical lowerings and serves its
+    # first request with zero lower() calls.
     print(f"\nrestarting from {store_path} "
           f"({os.path.getsize(store_path)} bytes)...")
-    eng2 = ServeEngine(model, params, get_strategy(args.strategy),
-                       serve_cfg)
+    program2 = repro.api.compile(args.arch, policy=args.strategy,
+                                 smoke=True, plan_store_path=store_path)
+    eng2 = program2.serve(params, serve_cfg)
     t0 = time.perf_counter()
     eng2.submit(Request(rid=10_000,
-                        prompt=rng.integers(0, cfg.vocab, 20,
+                        prompt=rng.integers(0, vocab, 20,
                                             dtype=np.int32),
                         max_new_tokens=4))
     eng2.run()
     dt = time.perf_counter() - t0
-    ps2 = eng2.store.snapshot()
+    ps2 = program2.stats
     print(f"first request after restart: {dt*1e3:.0f}ms; "
           f"{ps2['restore_hits']} restored lowerings, {ps2['shares']} "
           f"shared, {ps2['misses']} cold lowers")

@@ -13,15 +13,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.configs import get_smoke_config
-from repro.core.strategies import get_strategy
+import repro
 from repro.data import DataConfig, SyntheticBackend, TokenPipeline
 from repro.ft.elastic import FailureSimulator
-from repro.models.layers import MeshInfo
-from repro.models.registry import build_model
 from repro.optim import AdamWConfig
-from repro.train import (TrainLoopConfig, TrainStepConfig, build_train_step,
-                         train_loop)
+from repro.train import TrainLoopConfig, TrainStepConfig, train_loop
 
 
 def main():
@@ -33,16 +29,16 @@ def main():
     ap.add_argument("--crash-at", type=int, default=60)
     args = ap.parse_args()
 
-    cfg = get_smoke_config(args.arch)
-    model = build_model(cfg, MeshInfo(tp=1, dp=1))
     tcfg = TrainStepConfig(
         optimizer=AdamWConfig(lr=1e-3, quantized=True),
         remat=False, compress_grads=True,
         warmup=10, total_steps=args.steps)
-    step_fn, segs, binputs, init_opt = build_train_step(
-        model, get_strategy("dynamic"), args.batch, args.seq, tcfg)
-    params = model._init_from_segments(segs, jax.random.PRNGKey(0))
-    opt = init_opt(params)
+    # the whole integration: arch + policy in, a trainable Program out
+    program = repro.api.compile(args.arch, policy="dynamic", smoke=True)
+    cfg = program.model.cfg
+    step = program.train_step(args.batch, args.seq, cfg=tcfg)
+    params = program.init_params(0, phase="train")
+    opt = step.init_opt(params)
     n = sum(int(np.prod(p.shape))
             for p in jax.tree_util.tree_leaves(params))
     print(f"training {cfg.name}: {n/1e6:.2f}M params, "
@@ -75,7 +71,7 @@ def main():
         sim = FailureSimulator(crash_steps=(args.crash_at,))
         t0 = time.perf_counter()
         params, opt, hist = train_loop(
-            jax.jit(step_fn, donate_argnums=(0, 1)), params, opt, pipe,
+            jax.jit(step.fn, donate_argnums=(0, 1)), params, opt, pipe,
             TrainLoopConfig(steps=args.steps, ckpt_dir=ckpt_dir,
                             ckpt_every=25, log_every=20),
             failure_sim=sim, to_device=to_dev, log=print)

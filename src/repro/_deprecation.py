@@ -1,0 +1,27 @@
+"""Warn-once plumbing for the pre-facade entry points.
+
+The PR-5 frontend redesign keeps every old builder working (they are thin
+shims over the same machinery the ``repro.api`` facade routes through)
+but each one announces its replacement exactly once per process, so a
+long-running trainer or server is not spammed per step rebuild.
+"""
+from __future__ import annotations
+
+import warnings
+
+_WARNED: set = set()
+
+
+def warn_once(name: str, replacement: str, stacklevel: int = 3) -> None:
+    """Emit one ``DeprecationWarning`` per process for ``name``."""
+    if name in _WARNED:
+        return
+    _WARNED.add(name)
+    warnings.warn(
+        f"{name} is deprecated; use {replacement} instead",
+        DeprecationWarning, stacklevel=stacklevel)
+
+
+def reset() -> None:
+    """Forget which warnings already fired (test isolation only)."""
+    _WARNED.clear()

@@ -1,0 +1,406 @@
+"""``repro.api`` — one entry point from model to scheduled execution.
+
+The paper's claim is *transparent* integration: the logical model is
+decoupled from the physical schedule, and strategies plug in with minimal
+code change (§3; contrast with Opara's per-model stream capture).  The
+backend has delivered that since PR 1-4 (plan IR, unified persistent
+PlanStore, tiered serve runtime) — this module makes the *frontend* match
+it.  One call::
+
+    program = repro.api.compile("chatglm3-6b", policy=my_policy,
+                                plan_store_path="plans.dfps", smoke=True)
+    params  = program.init_params(jax.random.PRNGKey(0))
+    engine  = program.serve(ServeConfig(max_batch=8))          # serving
+    step    = program.train_step(global_batch=8, seq_len=128)  # training
+
+replaces threading ``scheduler`` / ``plan_store`` / ``lowered`` / mesh
+info through five separate builders.  The :class:`Program`:
+
+  * owns the **PlanStore lifecycle** — open/warm-start at compile time,
+    checkpoint after every build and on ``close()``, one store shared by
+    every step the program ever builds (train, prefill buckets, decode
+    tiers, serve engine);
+  * resolves the **ScheduleContext** from actual inputs (shapes or an
+    example batch), so callers never construct one by hand;
+  * accepts a **StrategyPolicy** (or bare scheduler, or strategy name)
+    whose identity salts every PlanStore outer key — swapping policies
+    can never replay the wrong cached plan.
+
+``compile`` also accepts a plain traced ``Module`` or ``OpGraph`` (the
+quickstart path): the returned program records/lowers/realizes plans per
+shape bucket through the same store.
+
+Old entry points (``build_train_step``, ``build_global_*``) remain as
+thin shims that warn once and route through the same machinery.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional
+
+import jax
+
+from .core.backend import Realizer
+from .core.graph import OpGraph
+from .core.module import Module, trace
+from .core.plan import strategy_salt
+from .core.plan_store import (PlanStore, checkpoint_plan_store,
+                              resolve_plan_store)
+from .core.policy import StrategyPolicy, as_policy, resolve_strategy
+from .core.scheduler import ScheduleContext, record_plan
+
+
+@dataclasses.dataclass
+class CompiledStep:
+    """A built step function plus everything needed to feed it.
+
+    Single-host steps fill ``fn`` / ``segments`` / ``batch_inputs`` (+
+    ``init_opt`` for training); mesh-global steps additionally carry the
+    global ``in_sdss`` ShapeDtypeStructs, ``in_shardings`` and the
+    ``donate`` argnums to pass to ``jax.jit``."""
+
+    fn: Callable
+    segments: Any = None
+    batch_inputs: Any = None
+    init_opt: Optional[Callable] = None
+    in_sdss: Any = None
+    in_shardings: Any = None
+    donate: tuple = ()
+
+    def __call__(self, *args, **kwargs):
+        return self.fn(*args, **kwargs)
+
+
+def compile(model, policy=None, mesh=None, plan_store=None,
+            plan_store_path: Optional[str] = None, example_inputs=None,
+            smoke: bool = False) -> "Program":
+    """Build a :class:`Program` — the single frontend entry point.
+
+    ``model``   — an arch name (``"chatglm3-6b"``), an ``ArchConfig``, a
+                  built ``LMBase`` model, or (toy/prototyping path) a
+                  traced ``core.Module`` / ``OpGraph``.
+    ``policy``  — a ``StrategyPolicy``, a bare ``OpSchedulerBase``, or a
+                  strategy name; default: the built-in dynamic policy.
+    ``mesh``    — ``None`` (single host), a ``models.layers.MeshInfo``
+                  (single host, explicit tp/dp for model construction),
+                  or a ``jax.sharding.Mesh`` — steps then come back
+                  shard_mapped with global shardings (the launch layer).
+    ``plan_store`` / ``plan_store_path`` — share/persist lowered plans;
+                  a path warm-starts the store at compile time and the
+                  program checkpoints it after every build.
+    ``example_inputs`` — name -> ShapeDtypeStruct, required when
+                  ``model`` is an untraced ``Module``.
+    ``smoke``   — with an arch name: the reduced same-family config.
+    """
+    from .models.layers import MeshInfo
+
+    if policy is None:
+        from .core.strategies.dynamic import dynamic_policy
+        policy = dynamic_policy()
+    policy = as_policy(policy)
+    store = resolve_plan_store(plan_store, plan_store_path)
+    if store is None:
+        store = PlanStore()
+
+    if isinstance(model, Module):
+        if example_inputs is None:
+            raise ValueError(
+                "compile(Module, ...) needs example_inputs= "
+                "(name -> ShapeDtypeStruct) to trace the graph")
+        graph = trace(model, dict(example_inputs))
+        return Program(graph=graph, policy=policy, store=store)
+    if isinstance(model, OpGraph):
+        return Program(graph=model, policy=policy, store=store)
+
+    jax_mesh = mesh if _is_jax_mesh(mesh) else None
+    mesh_info = mesh if isinstance(mesh, MeshInfo) else None
+    if mesh_info is None:
+        if jax_mesh is not None:
+            from .launch.mesh import make_mesh_info
+            mesh_info = make_mesh_info(jax_mesh)
+        else:
+            mesh_info = MeshInfo(tp=1, dp=1)
+
+    if isinstance(model, str):
+        from .configs import get_config, get_smoke_config
+        model = get_smoke_config(model) if smoke else get_config(model)
+    if not hasattr(model, "build_segments"):       # ArchConfig -> LMBase
+        from .models.registry import build_model
+        model = build_model(model, mesh_info)
+    return Program(model=model, policy=policy, store=store,
+                   mesh=jax_mesh)
+
+
+def _is_jax_mesh(mesh) -> bool:
+    return mesh is not None and hasattr(mesh, "devices") \
+        and hasattr(mesh, "axis_names")
+
+
+class Program:
+    """A model bound to a strategy policy and a PlanStore.
+
+    Every ``*_step`` builder below routes through the same machinery the
+    old entry points used (``build_forward`` -> PlanStore lowering ->
+    capture/replay; the launch shardings under a mesh) — the program
+    only owns what used to be the caller's burden: context resolution,
+    store lifecycle, and strategy identity.
+    """
+
+    def __init__(self, model=None, graph: Optional[OpGraph] = None,
+                 policy: StrategyPolicy = None, store: PlanStore = None,
+                 mesh=None):
+        self.model = model
+        self.graph = graph
+        self.policy = policy
+        self.store = store
+        self.mesh = mesh
+        self._engines: list = []
+        self._graph_cache: dict = {}    # shape bucket -> (graph, realizer)
+
+    # -- lifecycle ---------------------------------------------------------
+    def checkpoint(self) -> int:
+        """Persist the PlanStore if it is path-bound (else no-op)."""
+        return checkpoint_plan_store(self.store)
+
+    def close(self) -> int:
+        """Shut down every engine this program created, checkpoint the
+        store, and drop the engine references; the program stays usable
+        after (new builds/engines re-attach)."""
+        for engine in self._engines:
+            engine.shutdown()
+        self._engines.clear()
+        return self.checkpoint()
+
+    def __enter__(self) -> "Program":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    @property
+    def stats(self) -> dict:
+        return self.store.snapshot()
+
+    # -- context resolution ------------------------------------------------
+    def _context(self, phase: str, B_loc: int, S: int,
+                 global_batch: Optional[int] = None) -> ScheduleContext:
+        mesh_shape = {}
+        if self.mesh is not None:
+            from .launch.mesh import mesh_shape_dict
+            mesh_shape = mesh_shape_dict(self.mesh)
+        return ScheduleContext(
+            local_batch=B_loc, global_batch=global_batch or B_loc,
+            seq_len=S, phase=phase, arch=self.model.cfg.name,
+            mesh_shape=mesh_shape)
+
+    @staticmethod
+    def _shape_of(batch) -> tuple:
+        ids = batch["ids"]
+        return int(ids.shape[0]), int(ids.shape[1])
+
+    def _require_lm(self, what: str):
+        if self.model is None:
+            raise TypeError(
+                f"Program.{what} needs an LM program; this program wraps "
+                "a raw Module/OpGraph — call it directly instead")
+
+    # -- LM path -----------------------------------------------------------
+    def init_params(self, key=0, phase: str = "prefill") -> dict:
+        """Initialize the model's parameter tree (any phase's segments —
+        parameter shapes are phase-independent)."""
+        self._require_lm("init_params")
+        if isinstance(key, int):
+            key = jax.random.PRNGKey(key)
+        return self.model.init_params(key, phase=phase)
+
+    def train_step(self, global_batch: Optional[int] = None,
+                   seq_len: Optional[int] = None, *, batch=None,
+                   cfg=None, remat_policy: str = "full") -> CompiledStep:
+        """Build the train step for a (batch, seq) bucket.
+
+        Shapes come from ``global_batch``/``seq_len`` or from an example
+        ``batch`` dict (``batch["ids"].shape``).  Single host: the handle
+        carries ``fn(params, opt, batch, step)``, ``init_opt``,
+        ``segments`` and ``batch_inputs``.  Under a mesh: additionally
+        the global sdss/shardings/donation for ``jax.jit``.
+        """
+        self._require_lm("train_step")
+        from .train.step import TrainStepConfig, _build_train_step
+        if batch is not None:
+            global_batch, seq_len = self._shape_of(batch)
+        if not global_batch or not seq_len:
+            raise ValueError("train_step needs global_batch+seq_len or an "
+                             "example batch")
+        tcfg = cfg or TrainStepConfig(remat=True,
+                                      remat_policy=remat_policy)
+        if self.mesh is not None:
+            from .configs.base import ShapeConfig
+            from .launch.steps import _build_global_train_step
+            shape = ShapeConfig(f"train_{seq_len}", seq_len, global_batch,
+                                "train")
+            fn, in_sdss, in_shd, donate, init_opt, segs = \
+                _build_global_train_step(
+                    self.model, self.policy, shape, self.mesh, tcfg=tcfg,
+                    remat_policy=remat_policy, plan_store=self.store)
+            self.checkpoint()
+            return CompiledStep(fn=fn, segments=segs, init_opt=init_opt,
+                                in_sdss=in_sdss, in_shardings=in_shd,
+                                donate=donate)
+        info = self._context("train", global_batch, seq_len)
+        fn, segs, binputs, init_opt = _build_train_step(
+            self.model, self.policy, global_batch, seq_len, tcfg, info,
+            plan_store=self.store)
+        self.checkpoint()
+        return CompiledStep(fn=fn, segments=segs, batch_inputs=binputs,
+                            init_opt=init_opt)
+
+    def prefill(self, global_batch: Optional[int] = None,
+                seq_len: Optional[int] = None, *, batch=None,
+                s_max: Optional[int] = None) -> CompiledStep:
+        """Build the prefill step for a (batch, seq-bucket) shape."""
+        self._require_lm("prefill")
+        if batch is not None:
+            global_batch, seq_len = self._shape_of(batch)
+        if not global_batch or not seq_len:
+            raise ValueError("prefill needs global_batch+seq_len or an "
+                             "example batch")
+        if self.mesh is not None:
+            from .configs.base import ShapeConfig
+            from .launch.steps import _build_global_prefill_step
+            shape = ShapeConfig(f"prefill_{seq_len}", seq_len,
+                                global_batch, "prefill")
+            fn, in_sdss, in_shd, donate, segs = _build_global_prefill_step(
+                self.model, self.policy, shape, self.mesh,
+                plan_store=self.store)
+            self.checkpoint()
+            return CompiledStep(fn=fn, segments=segs, in_sdss=in_sdss,
+                                in_shardings=in_shd, donate=donate)
+        from .models.base import build_forward
+        s_max = s_max or seq_len
+        segs, binputs = self.model.build_segments(
+            "prefill", global_batch, seq_len, s_max=s_max)
+        info = self._context("prefill", global_batch, seq_len)
+        fwd = build_forward(segs, self.policy, info, lowered=True,
+                            plan_cache=self.store,
+                            op_config=self.model.op_closure_config())
+        self.checkpoint()
+        return CompiledStep(fn=fwd, segments=segs, batch_inputs=binputs)
+
+    def decode_tiers(self, max_batch: int, s_max: int,
+                     tiers=None) -> dict:
+        """Decode steps at every batch tier against the program's store:
+        the first tier lowers, the rest specialize (zero extra
+        ``lower()`` calls).  Returns ``{tier: CompiledStep}``."""
+        self._require_lm("decode_tiers")
+        from .serve.engine import pow2_tiers
+        tiers = tuple(tiers or pow2_tiers(max_batch))
+        if self.mesh is not None:
+            from .configs.base import ShapeConfig
+            from .launch.steps import _build_global_decode_tiers
+            shape = ShapeConfig(f"decode_{s_max}", s_max, max_batch,
+                                "decode")
+            out = {}
+            built = _build_global_decode_tiers(
+                self.model, self.policy, shape, self.mesh, tiers=tiers,
+                plan_store=self.store)
+            for tier, (fn, in_sdss, in_shd, donate, segs) in built.items():
+                out[tier] = CompiledStep(fn=fn, segments=segs,
+                                         in_sdss=in_sdss,
+                                         in_shardings=in_shd,
+                                         donate=donate)
+            self.checkpoint()
+            return out
+        from .models.base import build_forward
+        out = {}
+        for tier in tiers:
+            segs, binputs = self.model.build_segments(
+                "decode", tier, 1, s_max=s_max)
+            info = self._context("decode", tier, s_max)
+            fwd = build_forward(segs, self.policy, info, lowered=True,
+                                plan_cache=self.store,
+                                op_config=self.model.op_closure_config())
+            out[tier] = CompiledStep(fn=fwd, segments=segs,
+                                     batch_inputs=binputs)
+        self.checkpoint()
+        return out
+
+    def serve(self, params, cfg=None, **overrides):
+        """Construct a :class:`ServeEngine` over the program's model,
+        policy and (shared, already warm-started) PlanStore.  Pass a
+        ``ServeConfig`` or its fields as keyword overrides."""
+        self._require_lm("serve")
+        if self.mesh is not None:
+            raise NotImplementedError(
+                "Program.serve is single-host (the engine's host loop); "
+                "use decode_tiers()/prefill() for mesh-global serving "
+                "steps")
+        from .serve.engine import ServeConfig, ServeEngine
+        if cfg is None:
+            cfg = ServeConfig(**overrides)
+        elif overrides:
+            cfg = dataclasses.replace(cfg, **overrides)
+        engine = ServeEngine(self.model, params, self.policy, cfg,
+                             plan_store=self.store)
+        self._engines.append(engine)
+        return engine
+
+    # -- raw-graph path (prototyping / quickstart) -------------------------
+    def plan(self, local_batch: Optional[int] = None, phase: str = "train",
+             **ctx_overrides):
+        """Record (and cache) the execution plan the policy chooses for a
+        context — introspection for the Fig. 6/7 workflow."""
+        if self.graph is None:
+            raise TypeError("Program.plan is the raw-graph path; LM "
+                            "programs plan per step builder")
+        if local_batch is None:
+            local_batch = self._graph_batch()
+        info = ScheduleContext(local_batch=local_batch,
+                               global_batch=local_batch, phase=phase,
+                               **ctx_overrides)
+        _, _, plan = self._graph_program(info)
+        return plan
+
+    def __call__(self, params, inputs: dict) -> dict:
+        """Raw-graph execution: resolve the context from the concrete
+        inputs, record/lower the plan once per shape bucket (through the
+        program's PlanStore), and realize."""
+        if self.graph is None:
+            raise TypeError("this Program wraps an LM; build a step with "
+                            "train_step()/prefill()/decode_tiers()")
+        info = ScheduleContext(local_batch=self._graph_batch(inputs),
+                               global_batch=self._graph_batch(inputs),
+                               phase="train")
+        _, realizer, _ = self._graph_program(info)
+        return realizer(params, inputs)
+
+    def _graph_batch(self, inputs: Optional[dict] = None) -> int:
+        g = self.graph
+        for name, tid in sorted(g.inputs.items()):
+            ref = g.tensors[tid]
+            if ref.batch_dim is None:
+                continue
+            shape = (inputs[name].shape if inputs is not None
+                     else ref.shape)
+            return int(shape[ref.batch_dim])
+        return 0
+
+    def _graph_program(self, info: ScheduleContext):
+        from .core.partition import partition
+        key = (info.local_batch, info.phase)
+        hit = self._graph_cache.get(key)
+        if hit is not None:
+            return hit
+        sched = resolve_strategy(self.policy, info, graph=self.graph)
+        g = self.graph
+        # policy rule union, not the branch's rules — same invariant as
+        # build_forward: every bucket of one program sees one graph
+        rules = self.policy.partition_rules()
+        if rules:
+            g = partition(g, rules, default_depth=2)
+        plan = record_plan(g, sched, info)
+        salt = f"graph|{info.phase}|{strategy_salt(self.policy)}"
+        realizer = Realizer(g, plan, plan_cache=self.store,
+                            plan_salt=salt)
+        self._graph_cache[key] = (g, realizer, plan)
+        self.checkpoint()
+        return self._graph_cache[key]

@@ -6,24 +6,31 @@ Public API:
   Module / Op / Param / FnOp / trace / mark       — frontend capture
   SplitModule / SplitFunc / Mark / partition      — graph partition (Fig. 5)
   OpSchedulerBase / SchedCtx / record_plan        — programmable scheduling (Fig. 6)
+  StrategyPolicy / by_phase / by_token_threshold
+  / first_viable / when                           — per-context strategy policies
   static_analysis / Realizer / realize            — backend (Alg. 1)
   lower / LoweredPlan / specialize                — plan IR + capture/replay
-  PlanStore / fingerprint_v2                      — unified plan/exec cache
+  PlanStore / fingerprint_v2 / strategy_salt      — unified plan/exec cache
   RestoreError / FINGERPRINT_VERSION              — persisted-store contract
   sequential_plan                                 — reference fallback
 """
 from .analysis import AnalysisResult, static_analysis
 from .backend import FusedCallInfo, Realizer, realize, sequential_plan
-from .compile_cache import (GLOBAL_CACHE, GLOBAL_PLAN_CACHE, CompileCache,
-                            LoweredPlanCache)
 from .graph import FULL, OpGraph, OpNode, TensorRef
 from .lowering import LoweredPlan, LoweringError, lower, specialize
 from .module import FnOp, Module, Op, Param, mark, trace
 from .partition import Mark, SplitEveryOp, SplitFunc, SplitModule, partition
 from .plan import (FINGERPRINT_VERSION, ExecutionPlan, OpHandle, PlanStep,
-                   graph_fingerprint, structural_fingerprint)
+                   graph_fingerprint, scheduler_identity, strategy_salt,
+                   structural_fingerprint)
 from .plan_serde import FORMAT_VERSION, RestoreError
-from .plan_store import GLOBAL_STORE, PlanStore, fingerprint_v2
+from .plan_store import (GLOBAL_CACHE, GLOBAL_PLAN_CACHE, GLOBAL_STORE,
+                         CompileCache, LoweredPlanCache, PlanStore,
+                         fingerprint_v2)
+from .policy import (StrategyPolicy, as_policy, by_phase,
+                     by_token_threshold, first_viable, has_ops,
+                     local_batch_below, phase_is, resolve_strategy,
+                     tokens_of, when)
 from .scheduler import (OpSchedulerBase, SchedCtx, ScheduleContext,
                         record_plan)
 
@@ -34,6 +41,10 @@ __all__ = [
     "ExecutionPlan", "OpHandle", "PlanStep", "graph_fingerprint",
     "structural_fingerprint", "FINGERPRINT_VERSION",
     "OpSchedulerBase", "SchedCtx", "ScheduleContext", "record_plan",
+    "StrategyPolicy", "as_policy", "by_phase", "by_token_threshold",
+    "first_viable", "when", "has_ops", "local_batch_below", "phase_is",
+    "resolve_strategy", "tokens_of",
+    "scheduler_identity", "strategy_salt",
     "AnalysisResult", "static_analysis",
     "FusedCallInfo", "Realizer", "realize", "sequential_plan",
     "LoweredPlan", "LoweringError", "lower", "specialize",

@@ -1,51 +1,7 @@
-"""Deprecated shim — the split caches merged into ``core/plan_store.py``.
-
-``CompileCache`` (executables) and ``LoweredPlanCache`` (lowered plans)
-were unified into the single two-level ``PlanStore``; see that module for
-the fingerprint-v2 / shape-bucket key schema.  These aliases keep old
-import sites working: each is a ``PlanStore`` restricted to one level,
-with the legacy ``capacity`` constructor argument, ``len()`` scope, and
-``stats`` key names (``CompileCache`` mirrors the store's ``exec_*``
-counters back onto the old ``hits``/``misses``/``evictions`` keys).
-``GLOBAL_CACHE``/``GLOBAL_PLAN_CACHE`` both alias the raw
-``GLOBAL_STORE`` — its ``stats`` uses the new split key names and its
-``len()`` spans both levels.
-"""
-from __future__ import annotations
-
-from .plan_store import GLOBAL_STORE, PlanStore
-
-
-class LoweredPlanCache(PlanStore):
-    """Legacy alias: plan level of a ``PlanStore``."""
-
-    def __init__(self, capacity: int = 256):
-        super().__init__(plan_capacity=capacity)
-        self.capacity = capacity
-
-    def __len__(self):
-        return self.n_plans
-
-
-class CompileCache(PlanStore):
-    """Legacy alias: executable level of a ``PlanStore``."""
-
-    def __init__(self, capacity: int = 128):
-        super().__init__(exec_capacity=capacity)
-        self.capacity = capacity
-
-    def get_or_build(self, key, build, example_args=None):
-        out = super().get_or_build(key, build, example_args)
-        # legacy contract: exec counters were 'hits'/'misses'/'evictions'
-        s = self.stats
-        s["hits"] = s["exec_hits"]
-        s["misses"] = s["exec_misses"]
-        s["evictions"] = s["exec_evictions"]
-        return out
-
-    def __len__(self):
-        return self.n_execs
-
-
-GLOBAL_CACHE = GLOBAL_STORE
-GLOBAL_PLAN_CACHE = GLOBAL_STORE
+"""Retired module — the split caches live on as deprecation shims in
+``core/plan_store.py`` (``CompileCache`` / ``LoweredPlanCache`` warn once
+on construction; ``GLOBAL_CACHE``/``GLOBAL_PLAN_CACHE`` alias the raw
+``GLOBAL_STORE``).  This file only re-exports them so old import sites
+keep resolving."""
+from .plan_store import (GLOBAL_CACHE, GLOBAL_PLAN_CACHE,  # noqa: F401
+                         CompileCache, LoweredPlanCache)

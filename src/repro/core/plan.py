@@ -21,10 +21,13 @@ from .graph import FULL, OpGraph
 
 # Version of the structural-key / outer-key schema ("fingerprint v2").
 # Bump whenever ``structural_key`` / ``fused_fn_identity`` / ``outer_key``
-# change shape: persisted PlanStore files embed it and refuse to restore
-# across versions (core/plan_serde.py), and CI keys its warm-start cache
-# on it so stale artifacts are never replayed.
-FINGERPRINT_VERSION = 2
+# / ``strategy_salt`` change shape: persisted PlanStore files embed it and
+# refuse to restore across versions (core/plan_serde.py), and CI keys its
+# warm-start cache on it so stale artifacts are never replayed.
+# v3: the strategy salt became a digest of the full scheduler/policy
+# identity (class + config + combinator tree) instead of a bare class
+# name, so entries persisted under v2 salts can never be redeemed.
+FINGERPRINT_VERSION = 3
 
 
 @dataclasses.dataclass(frozen=True)
@@ -148,6 +151,50 @@ def fused_fn_identity(fn) -> tuple:
             return ("id", id(fn))
         cells.append(v)
     return ("closure",) + qual + (tuple(cells),)
+
+
+def scheduler_identity(obj) -> tuple:
+    """Stable, hashable identity of a scheduler *or* strategy policy.
+
+    The PlanStore's outer key must separate two strategies that record
+    structurally different plans only under some contexts — a class name
+    alone cannot (``DynamicScheduler(split_tokens=1024)`` vs ``=4096``
+    agree on small buckets and diverge on large ones).  Resolution:
+
+      * anything with an ``identity()`` method (``StrategyPolicy``
+        combinators, ``DynamicScheduler``) -> that tuple verbatim, so a
+        policy's whole combinator tree enters the key;
+      * a plain scheduler instance -> class module + qualname + every
+        primitive public attribute (the constructor knobs: thresholds,
+        split counts, fusion axes).
+
+    Non-primitive attributes (sub-scheduler instances, caches) are
+    skipped — composites that matter must implement ``identity()``.
+    """
+    ident = getattr(obj, "identity", None)
+    if callable(ident):
+        return ident()
+    cls = type(obj)
+    attrs = tuple(sorted(
+        (k, v) for k, v in vars(obj).items()
+        if not k.startswith("_") and _is_prim(v)))
+    return ("sched", cls.__module__, cls.__qualname__, attrs)
+
+
+def strategy_salt(obj) -> str:
+    """Strategy identity as a short printable salt for the PlanStore
+    outer key (``build_forward`` composes it with arch/phase/segment).
+
+    Two different policies therefore can never alias cached plans, even
+    when they resolve to the same scheduler class for some context; the
+    same policy reconstructed in a new process produces the same salt,
+    so persisted artifacts stay redeemable (provided its predicates are
+    named functions or frozen dataclasses, not lambdas — lambdas fall
+    back to ``id()`` identity and simply never share)."""
+    ident = scheduler_identity(obj)
+    digest = hashlib.sha256(repr(ident).encode()).hexdigest()[:12]
+    label = getattr(obj, "name", None) or type(obj).__name__
+    return f"{label}:{digest}"
 
 
 def structural_key(graph: OpGraph, plan: ExecutionPlan) -> tuple:

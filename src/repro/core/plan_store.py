@@ -58,6 +58,7 @@ from typing import Callable, Optional
 
 import jax
 
+from .._deprecation import warn_once
 from .lowering import LoweredPlan, LoweringError, lower, specialize
 from .plan import FINGERPRINT_VERSION, structural_key
 from .plan_serde import (FORMAT_VERSION, RestoreError, encode_analysis,
@@ -601,3 +602,47 @@ def _exec_nbytes(compiled) -> int:
 
 
 GLOBAL_STORE = PlanStore()
+
+
+# -- deprecated aliases (pre-PR-2 split caches) ------------------------------
+# The old ``core/compile_cache.py`` module body is retired; these shims
+# live beside the store they restrict and warn once per process.
+
+
+class LoweredPlanCache(PlanStore):
+    """Deprecated alias: the plan level of a ``PlanStore`` with the
+    legacy ``capacity`` constructor argument and ``len()`` scope."""
+
+    def __init__(self, capacity: int = 256):
+        warn_once("repro.core.LoweredPlanCache", "PlanStore")
+        super().__init__(plan_capacity=capacity)
+        self.capacity = capacity
+
+    def __len__(self):
+        return self.n_plans
+
+
+class CompileCache(PlanStore):
+    """Deprecated alias: the executable level of a ``PlanStore``; mirrors
+    the store's ``exec_*`` counters back onto the legacy
+    ``hits``/``misses``/``evictions`` stats keys."""
+
+    def __init__(self, capacity: int = 128):
+        warn_once("repro.core.CompileCache", "PlanStore")
+        super().__init__(exec_capacity=capacity)
+        self.capacity = capacity
+
+    def get_or_build(self, key, build, example_args=None):
+        out = super().get_or_build(key, build, example_args)
+        s = self.stats
+        s["hits"] = s["exec_hits"]
+        s["misses"] = s["exec_misses"]
+        s["evictions"] = s["exec_evictions"]
+        return out
+
+    def __len__(self):
+        return self.n_execs
+
+
+GLOBAL_CACHE = GLOBAL_STORE
+GLOBAL_PLAN_CACHE = GLOBAL_STORE

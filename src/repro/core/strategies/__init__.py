@@ -14,9 +14,10 @@ files is the reproduction of the paper's engineering-cost claim.
   dynamic      context-driven selection among the above (the paper's
                headline contribution: per-bucket strategy choice)
 """
+from ..policy import tokens_of  # noqa: F401  (re-export: legacy home)
 from .comet import Comet
 from .dbo import DualBatchOverlap
-from .dynamic import DynamicScheduler
+from .dynamic import DynamicScheduler, dynamic_policy  # noqa: F401
 from .flux import Flux
 from .nanoflow import NanoFlow
 from .sbo import SingleBatchOverlap
@@ -39,10 +40,3 @@ def get_strategy(name: str, **kw):
     if name not in STRATEGIES:
         raise KeyError(f"unknown strategy {name!r}; have {sorted(STRATEGIES)}")
     return STRATEGIES[name](**kw)
-
-
-def tokens_of(info) -> int:
-    """Token count of the step — the paper's batch-size split condition."""
-    if info.phase == "decode":
-        return info.local_batch
-    return info.local_batch * max(info.seq_len, 1)

@@ -1,7 +1,10 @@
 """Context-driven strategy selection — the paper's headline capability.
 
-The scheduler inspects the execution context (token count, phase, graph
-contents) at plan-record time and delegates to the best sub-strategy:
+Since PR 5 the selection logic is no longer a hardcoded ``pick`` method:
+``dynamic_policy()`` states it as :mod:`repro.core.policy` combinators —
+the same API users compose their own policies from — and
+``DynamicScheduler`` is a thin scheduler adapter over that policy (kept
+because every pre-facade entry point passes schedulers around):
 
   MoE graph, large batch   -> DBO  (attention merged, MoE split+overlap)
   dense graph, large batch -> NanoFlow split + TokenWeave fusion targets
@@ -11,6 +14,10 @@ contents) at plan-record time and delegates to the best sub-strategy:
   tiny batch               -> sequential fallback (lowest CPU overhead,
                               paper Fig. 8)
 """
+import dataclasses
+
+from ..policy import (StrategyPolicy, by_token_threshold, first_viable,
+                      has_ops, local_batch_below, when, with_graph)
 from ..scheduler import OpSchedulerBase
 from .dbo import DualBatchOverlap
 from .nanoflow import NanoFlow
@@ -19,36 +26,61 @@ from .sequential import Sequential
 from .tokenweave import TokenWeave
 
 
+@dataclasses.dataclass(frozen=True)
+class has_fusable_triples:
+    """Predicate: the graph has [all-reduce -> add -> RMSNorm] chains
+    TokenWeave can replace with its fused kernel."""
+
+    def __call__(self, ctx) -> bool:
+        g = (ctx.extra or {}).get("graph")
+        return g is not None and bool(TokenWeave().triples(g))
+
+
+def dynamic_policy(split_tokens: int = 2048, seq_tokens: int = 64,
+                   fuse: bool = True) -> StrategyPolicy:
+    """The built-in ``dynamic`` selection, stated as policy combinators.
+
+    Token thresholds route tiny steps to sequential and sub-split steps
+    to SBO; above the split threshold a viability chain prefers DBO on
+    MoE graphs, TokenWeave where its fusion targets exist, and NanoFlow
+    otherwise.  Users swap any branch without touching the others."""
+    sbo = SingleBatchOverlap()
+    fuse_branch = (when(has_fusable_triples(), TokenWeave()),) if fuse \
+        else ()
+    big = first_viable(
+        when(local_batch_below(2), sbo),
+        when(has_ops(r"moe_a2a|expert_ffn"),
+             DualBatchOverlap(min_tokens=split_tokens)),
+        *fuse_branch,
+        default=NanoFlow(min_tokens=split_tokens))
+    return by_token_threshold(
+        [(seq_tokens, Sequential()), (split_tokens, sbo)], above=big)
+
+
 class DynamicScheduler(OpSchedulerBase):
+    """Scheduler adapter over ``dynamic_policy`` (or any policy passed as
+    ``policy=``): resolves the sub-strategy at plan-record time from the
+    partitioned graph + context, then delegates ``schedule``."""
+
     name = "dynamic"
 
     def __init__(self, split_tokens: int = 2048, seq_tokens: int = 64,
-                 fuse: bool = True):
+                 fuse: bool = True, policy: StrategyPolicy = None):
         self.split_tokens = split_tokens
         self.seq_tokens = seq_tokens
         self.fuse = fuse
-        self._dbo = DualBatchOverlap(min_tokens=split_tokens)
-        self._nano = NanoFlow(min_tokens=split_tokens)
-        self._sbo = SingleBatchOverlap()
-        self._seq = Sequential()
-        self._tw = TokenWeave()
+        self.policy = policy or dynamic_policy(split_tokens, seq_tokens,
+                                               fuse)
+
+    def identity(self):
+        return ("dynamic", self.policy.identity())
 
     def partition_rules(self):
-        return self._dbo.partition_rules()
+        return self.policy.partition_rules()
 
     def pick(self, ctx):
-        from . import tokens_of
-        t = tokens_of(ctx.info)
-        has_moe = bool(ctx.find(r"moe_a2a|expert_ffn"))
-        if t < self.seq_tokens:
-            return self._seq
-        if t < self.split_tokens or ctx.info.local_batch < 2:
-            return self._sbo
-        if has_moe:
-            return self._dbo
-        if self.fuse and self._tw.triples(ctx.graph):
-            return self._tw
-        return self._nano
+        """Resolve the sub-strategy for a ``SchedCtx`` (record time)."""
+        return self.policy(with_graph(ctx.info, ctx.graph))
 
     def schedule(self, ctx):
         self.pick(ctx).schedule(ctx)

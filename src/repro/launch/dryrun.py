@@ -27,8 +27,8 @@ from ..models.registry import build_model
 from ..roofline.hlo import analyze as hlo_analyze
 from ..roofline.model import roofline_terms
 from .mesh import make_mesh_info, make_production_mesh, mesh_shape_dict
-from .steps import (build_global_decode_step, build_global_prefill_step,
-                    build_global_train_step)
+from .steps import (_build_global_decode_step, _build_global_prefill_step,
+                    _build_global_train_step)
 
 RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
                            "results", "dryrun")
@@ -60,13 +60,13 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
 
     t0 = time.perf_counter()
     if shape.kind == "train":
-        fn, in_sdss, in_shd, donate, _, segs = build_global_train_step(
+        fn, in_sdss, in_shd, donate, _, segs = _build_global_train_step(
             model, sched, shape, mesh, remat_policy=remat_policy)
     elif shape.kind == "prefill":
-        fn, in_sdss, in_shd, donate, segs = build_global_prefill_step(
+        fn, in_sdss, in_shd, donate, segs = _build_global_prefill_step(
             model, sched, shape, mesh)
     else:
-        fn, in_sdss, in_shd, donate, segs = build_global_decode_step(
+        fn, in_sdss, in_shd, donate, segs = _build_global_decode_step(
             model, sched, shape, mesh)
     t_build = time.perf_counter() - t0
 

@@ -1,5 +1,5 @@
 """Serving launcher: tiered async batched engine over a (smoke-sized)
-model.
+model, built through the ``repro.api`` facade.
 
   python -m repro.launch.serve --arch chatglm3-6b --smoke \
       --requests 16 --max-new 16 --strategy dynamic
@@ -13,14 +13,10 @@ from __future__ import annotations
 import argparse
 import time
 
-import jax
 import numpy as np
 
-from ..configs import get_config, get_smoke_config
-from ..core.strategies import get_strategy
-from ..models.layers import MeshInfo
-from ..models.registry import build_model
-from ..serve import Request, ServeConfig, ServeEngine
+from .. import api
+from ..serve import Request, ServeConfig
 
 
 def main(argv=None):
@@ -42,26 +38,25 @@ def main(argv=None):
                     help="persist lowered plans here (warm restarts)")
     args = ap.parse_args(argv)
 
-    cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
-    model = build_model(cfg, MeshInfo(tp=1, dp=1))
-    segs, _ = model.build_segments("prefill", 1, 32, s_max=args.s_max)
-    params = model._init_from_segments(segs, jax.random.PRNGKey(0))
+    program = api.compile(args.arch, policy=args.strategy,
+                          smoke=args.smoke,
+                          plan_store_path=args.plan_store)
+    params = program.init_params(0)
     scfg = ServeConfig(max_batch=args.max_batch, s_max=args.s_max,
                        prefill_buckets=(16, 32, 64),
                        prefill_batch=1 if args.baseline
                        else args.prefill_batch,
                        decode_tiers=(args.max_batch,) if args.baseline
                        else None,
-                       async_host=not args.baseline,
-                       plan_store_path=args.plan_store)
-    eng = ServeEngine(model, params, get_strategy(args.strategy), scfg)
+                       async_host=not args.baseline)
+    eng = program.serve(params, scfg)
     rng = np.random.default_rng(args.seed)
     t0 = time.perf_counter()
     for i in range(args.requests):
         n = int(rng.integers(4, 30))
         eng.submit(Request(rid=i,
-                           prompt=rng.integers(0, cfg.vocab, n,
-                                               dtype=np.int32),
+                           prompt=rng.integers(0, program.model.cfg.vocab,
+                                               n, dtype=np.int32),
                            max_new_tokens=args.max_new))
     done = eng.run()
     dt = time.perf_counter() - t0
@@ -78,6 +73,7 @@ def main(argv=None):
     print(f"TTFT p50={np.percentile(ttfts, 50)*1e3:.0f}ms "
           f"p99={np.percentile(ttfts, 99)*1e3:.0f}ms")
     eng.shutdown()
+    program.close()
     return done
 
 

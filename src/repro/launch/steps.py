@@ -12,11 +12,12 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from .._deprecation import warn_once
 from ..configs.base import ShapeConfig
 from ..core.plan_store import checkpoint_plan_store, resolve_plan_store
-from ..core.scheduler import OpSchedulerBase, ScheduleContext
+from ..core.scheduler import ScheduleContext
 from ..models.base import build_forward
-from ..train.step import TrainStepConfig, build_train_step
+from ..train.step import TrainStepConfig, _build_train_step
 from .mesh import mesh_shape_dict
 from .sharding import global_batch_specs, global_param_specs, shard_specs_of
 
@@ -54,13 +55,28 @@ def _opt_specs(param_sdss, param_specs):
             {"state": state_specs, "count": P()})
 
 
-def build_global_train_step(model, scheduler: OpSchedulerBase,
-                            shape: ShapeConfig, mesh,
+def build_global_train_step(model, scheduler, shape: ShapeConfig, mesh,
                             tcfg: TrainStepConfig = None,
                             remat_policy: str = "full",
                             lowered: bool = None,
                             plan_store=None,
                             plan_store_path: str = None):
+    """Deprecated pre-facade entry point — use
+    ``repro.api.compile(model, policy=..., mesh=mesh).train_step(...)``."""
+    warn_once("repro.launch.steps.build_global_train_step",
+              "repro.api.compile(..., mesh=mesh).train_step(...)")
+    return _build_global_train_step(
+        model, scheduler, shape, mesh, tcfg=tcfg,
+        remat_policy=remat_policy, lowered=lowered, plan_store=plan_store,
+        plan_store_path=plan_store_path)
+
+
+def _build_global_train_step(model, scheduler, shape: ShapeConfig, mesh,
+                             tcfg: TrainStepConfig = None,
+                             remat_policy: str = "full",
+                             lowered: bool = None,
+                             plan_store=None,
+                             plan_store_path: str = None):
     # lowered=None defers to tcfg (default True); an explicit bool wins
     tcfg = tcfg or TrainStepConfig(remat=True, remat_policy=remat_policy)
     if lowered is not None and lowered != tcfg.lowered:
@@ -69,7 +85,7 @@ def build_global_train_step(model, scheduler: OpSchedulerBase,
     batch_sdss, batch_shd, B_loc, _ = global_batch_specs(
         model, "train", shape.seq_len, shape.global_batch, mesh)
     info = _sched_info(model.cfg.name, shape, B_loc, mesh)
-    step, segs, _, init_opt = build_train_step(
+    step, segs, _, init_opt = _build_train_step(
         model, scheduler, B_loc, shape.seq_len, tcfg, info,
         plan_store=plan_store, plan_store_path=plan_store_path)
     p_sdss, p_shd = global_param_specs(model, segs, mesh)
@@ -108,11 +124,23 @@ def _kv_collect_specs(out_env, mesh, replicated):
     return specs
 
 
-def build_global_prefill_step(model, scheduler: OpSchedulerBase,
-                              shape: ShapeConfig, mesh,
+def build_global_prefill_step(model, scheduler, shape: ShapeConfig, mesh,
                               lowered: bool = True,
                               plan_store=None,
                               plan_store_path: str = None):
+    """Deprecated pre-facade entry point — use
+    ``repro.api.compile(model, policy=..., mesh=mesh).prefill(...)``."""
+    warn_once("repro.launch.steps.build_global_prefill_step",
+              "repro.api.compile(..., mesh=mesh).prefill(...)")
+    return _build_global_prefill_step(
+        model, scheduler, shape, mesh, lowered=lowered,
+        plan_store=plan_store, plan_store_path=plan_store_path)
+
+
+def _build_global_prefill_step(model, scheduler, shape: ShapeConfig, mesh,
+                               lowered: bool = True,
+                               plan_store=None,
+                               plan_store_path: str = None):
     """``plan_store``: a shared ``PlanStore`` — building several prefill
     bucket steps against one store lowers each segment once and
     specializes the rest (fingerprint v2 scopes entries by the model's
@@ -159,12 +187,25 @@ def build_global_prefill_step(model, scheduler: OpSchedulerBase,
     return fn, (p_sdss, batch_sdss), (p_shd, batch_shd), (), segs
 
 
-def build_global_decode_tiers(model, scheduler: OpSchedulerBase,
-                              shape: ShapeConfig, mesh,
+def build_global_decode_tiers(model, scheduler, shape: ShapeConfig, mesh,
                               tiers=None,
                               lowered: bool = True,
                               plan_store=None,
                               plan_store_path: str = None) -> dict:
+    """Deprecated pre-facade entry point — use
+    ``repro.api.compile(model, policy=..., mesh=mesh).decode_tiers(...)``."""
+    warn_once("repro.launch.steps.build_global_decode_tiers",
+              "repro.api.compile(..., mesh=mesh).decode_tiers(...)")
+    return _build_global_decode_tiers(
+        model, scheduler, shape, mesh, tiers=tiers, lowered=lowered,
+        plan_store=plan_store, plan_store_path=plan_store_path)
+
+
+def _build_global_decode_tiers(model, scheduler, shape: ShapeConfig, mesh,
+                               tiers=None,
+                               lowered: bool = True,
+                               plan_store=None,
+                               plan_store_path: str = None) -> dict:
     """Decode steps at every batch tier against one shared PlanStore —
     the launch-layer analogue of the serve engine's tiered captures.
 
@@ -184,18 +225,30 @@ def build_global_decode_tiers(model, scheduler: OpSchedulerBase,
     for tier in tiers:
         tshape = _dc.replace(shape, name=f"{shape.name}@{tier}",
                              global_batch=tier)
-        out[tier] = build_global_decode_step(
+        out[tier] = _build_global_decode_step(
             model, scheduler, tshape, mesh, lowered=lowered,
             plan_store=plan_store)
     checkpoint_plan_store(plan_store)
     return out
 
 
-def build_global_decode_step(model, scheduler: OpSchedulerBase,
-                             shape: ShapeConfig, mesh,
+def build_global_decode_step(model, scheduler, shape: ShapeConfig, mesh,
                              lowered: bool = True,
                              plan_store=None,
                              plan_store_path: str = None):
+    """Deprecated pre-facade entry point — use
+    ``repro.api.compile(model, policy=..., mesh=mesh).decode_tiers(...)``."""
+    warn_once("repro.launch.steps.build_global_decode_step",
+              "repro.api.compile(..., mesh=mesh).decode_tiers(...)")
+    return _build_global_decode_step(
+        model, scheduler, shape, mesh, lowered=lowered,
+        plan_store=plan_store, plan_store_path=plan_store_path)
+
+
+def _build_global_decode_step(model, scheduler, shape: ShapeConfig, mesh,
+                              lowered: bool = True,
+                              plan_store=None,
+                              plan_store_path: str = None):
     plan_store = resolve_plan_store(plan_store, plan_store_path)
     s_max = shape.seq_len
     batch_sdss, batch_shd, B_loc, repl = global_batch_specs(

@@ -16,15 +16,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ..configs import get_config, get_smoke_config
-from ..core.strategies import get_strategy
+from .. import api
 from ..data import DataConfig, SyntheticBackend, TokenPipeline
 from ..ft.elastic import FailureSimulator
-from ..models.layers import MeshInfo
-from ..models.registry import build_model
 from ..optim import AdamWConfig
-from ..train import (TrainLoopConfig, TrainStepConfig, build_train_step,
-                     train_loop)
+from ..train import TrainLoopConfig, TrainStepConfig, train_loop
 
 
 def main(argv=None):
@@ -46,19 +42,17 @@ def main(argv=None):
                     help="inject a simulated failure at this step")
     args = ap.parse_args(argv)
 
-    cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
-    mesh = MeshInfo(tp=1, dp=1)
-    model = build_model(cfg, mesh)
-    sched = get_strategy(args.strategy)
+    program = api.compile(args.arch, policy=args.strategy,
+                          smoke=args.smoke)
+    cfg = program.model.cfg
     tcfg = TrainStepConfig(
         optimizer=AdamWConfig(lr=args.lr, quantized=args.quantized_opt),
         remat=args.remat, compress_grads=args.grad_compress,
         warmup=max(args.steps // 20, 1), total_steps=args.steps)
-    step_fn, segs, binputs, init_opt = build_train_step(
-        model, sched, args.batch, args.seq, tcfg)
-    params = model._init_from_segments(segs, jax.random.PRNGKey(0))
-    opt = init_opt(params)
-    jit_step = jax.jit(step_fn, donate_argnums=(0, 1))
+    step = program.train_step(args.batch, args.seq, cfg=tcfg)
+    params = program.init_params(0, phase="train")
+    opt = step.init_opt(params)
+    jit_step = jax.jit(step.fn, donate_argnums=(0, 1))
 
     n_params = sum(int(np.prod(p.shape))
                    for p in jax.tree_util.tree_leaves(params))

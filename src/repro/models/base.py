@@ -25,7 +25,6 @@ from ..configs.base import ArchConfig
 from ..core import (OpGraph, Realizer, ScheduleContext, partition,
                     record_plan, trace)
 from ..core.module import Module
-from ..core.scheduler import OpSchedulerBase
 from .layers import (AddOp, AllGatherOp, AttentionOp, DecodeAttentionOp,
                      EmbedOp, HeadLayout, HeadLossOp, LmHeadOp, MeshInfo,
                      MLPBlock, OProj, PsumOp, QKVProj, ReduceScatterOp,
@@ -128,7 +127,7 @@ class Forward:
 
 
 def build_forward(segments: Sequence[Segment],
-                  scheduler: OpSchedulerBase,
+                  scheduler,
                   info: ScheduleContext,
                   remat: bool = False,
                   remat_policy: str = "full",
@@ -137,11 +136,18 @@ def build_forward(segments: Sequence[Segment],
                   op_config=()) -> Forward:
     """Partition + schedule every segment graph, returning the Forward.
 
+    ``scheduler`` may be an ``OpSchedulerBase``, a ``StrategyPolicy``, or
+    a strategy name: a policy is resolved per segment against the
+    ScheduleContext (enriched with the segment's traced graph under
+    ``extra['graph']`` so graph-conditional predicates can see op names).
+    The *policy's* identity — not merely the resolved scheduler's class —
+    enters the PlanStore salt, so two policies never alias cached plans.
+
     ``lowered=True`` (default) compiles each segment plan to the slot-based
     instruction stream.  Pass a ``PlanStore`` as ``plan_cache`` to share
     lowered plans across builds: the store's outer key is fingerprint v2
-    (shape-free graph/plan structure + an (arch, phase, scheduler,
-    segment) salt + ``op_config``), the inner key is the shape bucket —
+    (shape-free graph/plan structure + an (arch, phase, strategy-salt,
+    segment) key + ``op_config``), the inner key is the shape bucket —
     so rebuilding a known bucket is a hit, and a *new* bucket of a known
     structure specializes the canonical lowering instead of re-running
     static analysis and lowering (the cross-prefill-bucket share path).
@@ -153,15 +159,23 @@ def build_forward(segments: Sequence[Segment],
     mesh) so structurally identical graphs with different kernel or
     sharding choices cannot alias.
     """
-    salt = f"{info.arch}|{info.phase}|{type(scheduler).__name__}"
+    from ..core.plan import strategy_salt
+    from ..core.policy import as_policy, resolve_strategy
+    policy = as_policy(scheduler)
+    salt = f"{info.arch}|{info.phase}|{strategy_salt(policy)}"
+    # partition with the policy's rule UNION, never the resolved branch's
+    # rules: two shape buckets of one program must see the same graph, or
+    # their structural keys diverge and cross-bucket PlanStore sharing
+    # silently dies (the StrategyPolicy.partition_rules invariant)
+    rules = policy.partition_rules()
     realizers = {}
     segs = []
     for seg in segments:
         g = seg.graph
-        rules = scheduler.partition_rules()
+        sched = resolve_strategy(policy, info, graph=g)
         if rules:
             g = partition(g, rules, default_depth=2)
-        plan = record_plan(g, scheduler, info)
+        plan = record_plan(g, sched, info)
         seg = dataclasses.replace(seg, graph=g)
         realizers[seg.key] = Realizer(g, plan, lowered=lowered,
                                       plan_cache=plan_cache,

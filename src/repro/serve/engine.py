@@ -22,7 +22,12 @@ eliminate copy overheads":
     per-row lengths), and prompts longer than the largest bucket run as
     chunked prefill steps through the *decode* graph at chunk-sized
     query length — cached attention where chunk position ``j`` sees
-    ``cache_len + j + 1`` keys — instead of crashing.
+    ``cache_len + j + 1`` keys — instead of crashing.  Chunk dispatch is
+    **fair**: each engine iteration admits every waiting whole-prompt
+    group first and then issues *one* chunk of the oldest in-progress
+    chunked prefill (round-robin), so a long prompt never monopolizes
+    dispatch for ``len/chunk`` consecutive iterations and short requests
+    submitted behind it keep their TTFT.
 
   * **Async host loop.**  Sampling is on-device (argmax + eos/length
     masks inside the jitted decode step), prefill KV lands in the cache
@@ -52,8 +57,8 @@ import jax.numpy as jnp
 import numpy as np
 from jax import lax
 
-from ..core.plan_store import PlanStore
-from ..core.scheduler import OpSchedulerBase, ScheduleContext
+from ..core.plan_store import PlanStore, resolve_plan_store
+from ..core.scheduler import ScheduleContext
 from ..models.base import build_forward
 from .kv_cache import KVCacheManager
 
@@ -119,8 +124,15 @@ class ServeConfig:
 
 
 class ServeEngine:
-    def __init__(self, model, params, scheduler: OpSchedulerBase,
-                 cfg: ServeConfig):
+    """``scheduler`` accepts an ``OpSchedulerBase`` *or* a
+    ``StrategyPolicy`` (resolved per build context by ``build_forward``).
+    ``plan_store`` injects an externally-owned store — the
+    ``repro.api.Program`` facade passes its own warm-started store so
+    every step the program builds shares one artifact; without it the
+    engine opens/creates a store from ``cfg``."""
+
+    def __init__(self, model, params, scheduler, cfg: ServeConfig,
+                 plan_store: Optional[PlanStore] = None):
         self.model = model
         self.params = params
         self.scheduler = scheduler
@@ -141,14 +153,37 @@ class ServeEngine:
                        plan_budget_bytes=cfg.plan_budget_bytes,
                        exec_capacity=cfg.exec_capacity,
                        exec_budget_bytes=cfg.exec_budget_bytes)
-        if cfg.plan_store_path:
+        if plan_store is not None:
+            if (cfg.plan_store_path and plan_store.path
+                    and cfg.plan_store_path != plan_store.path):
+                raise ValueError(
+                    f"conflicting persistence targets: the injected "
+                    f"PlanStore is bound to {plan_store.path!r} but "
+                    f"ServeConfig.plan_store_path={cfg.plan_store_path!r}"
+                    "; drop one of them")
+            self.store = resolve_plan_store(plan_store,
+                                            cfg.plan_store_path)
+            # a shared store keeps its own budgets unless this config
+            # explicitly overrides them (non-default values win — the
+            # facade path must not silently drop a user's byte caps)
+            defaults = ServeConfig()
+            for field, val in budgets.items():
+                if val != getattr(defaults, field):
+                    setattr(self.store, field, val)
+        elif cfg.plan_store_path:
             self.store = PlanStore.open(cfg.plan_store_path, **budgets)
         else:
             self.store = PlanStore(**budgets)
         self._op_config = model.op_closure_config()
         self.waiting: list[Request] = []
         self.active: dict[int, Request] = {}     # row -> request
+        # in-progress chunked prefills: rows are allocated (KV filling
+        # chunk by chunk) but not yet decoding; round-robin queue
+        self._chunking: list[dict] = []
         self.finished: list[Request] = []
+        # admission-order record: ("prefill", rids) / ("chunk", rid)
+        # tuples in dispatch order — the fairness contract's test surface
+        self.dispatch_log: list[tuple] = []
         # device-resident loop state: the sampled token of every row's
         # last decode step, chained into the next step without touching
         # the host (the async half of the double-buffered loop)
@@ -184,7 +219,8 @@ class ServeEngine:
 
     def run(self, max_iters: int = 10_000) -> list:
         it = 0
-        while (self.waiting or self.active or self._pending is not None
+        while (self.waiting or self.active or self._chunking
+               or self._pending is not None
                or self._pending_prefill) and it < max_iters:
             self._admit()
             handle = self._dispatch_decode()
@@ -208,12 +244,13 @@ class ServeEngine:
             self._decode_fn(t)
 
     def checkpoint(self) -> int:
-        """Persist the PlanStore when a path is configured; returns the
-        number of outer entries written (0 when persistence is off or
-        nothing changed since the last checkpoint — run() calls this on
-        every queue drain, so a steady-state server must not rewrite an
+        """Persist the PlanStore when it is path-bound (via
+        ``cfg.plan_store_path`` or an injected store); returns the number
+        of outer entries written (0 when persistence is off or nothing
+        changed since the last checkpoint — run() calls this on every
+        queue drain, so a steady-state server must not rewrite an
         unchanged artifact per request)."""
-        if not self.cfg.plan_store_path or not self.store.dirty:
+        if not self.store.path or not self.store.dirty:
             return 0
         return self.store.save()
 
@@ -243,10 +280,16 @@ class ServeEngine:
         return tiers[-1]
 
     def _admit(self):
+        """Fair admission: whole-prompt groups first, then exactly one
+        chunk of the oldest in-progress chunked prefill per iteration
+        (round-robin).  An oversized prompt at the queue head only
+        *stages* its chunk state — its chunks interleave with later
+        iterations' admits instead of monopolizing dispatch for
+        ``len/chunk`` consecutive steps."""
         big = self.cfg.prefill_buckets[-1]
         while self.waiting and self.cache.free_rows:
             if len(self.waiting[0].prompt) > big:
-                self._admit_chunked(self.waiting.pop(0))
+                self._start_chunked(self.waiting.pop(0))
                 continue
             group = []
             while (self.waiting and self.cache.free_rows
@@ -257,6 +300,7 @@ class ServeEngine:
                 group.append(req)
             if group:
                 self._dispatch_prefill(group)
+        self._step_chunked()
 
     def _dispatch_prefill(self, group: list):
         """One bucketed prefill call over a real batch of requests.
@@ -299,6 +343,8 @@ class ServeEngine:
             self.cache.caches, self._last_ids)
         self._stats["prefill_steps"] += 1
         self._stats["prefill_reqs"] += len(group)
+        self.dispatch_log.append(("prefill",
+                                  tuple(r.rid for r in group)))
         if slots:
             self._pending_prefill.append((tok, slots))
 
@@ -378,14 +424,12 @@ class ServeEngine:
             off += c
         return chunks
 
-    def _admit_chunked(self, req: Request):
-        """Prompt longer than the largest bucket: run it through the
-        decode graph in chunk-sized steps (cached attention), writing KV
-        in-place per chunk.  All chunks dispatch back-to-back with no
-        host sync; the sentinel decode step then produces the first
-        token like any bucket-padded prefill."""
-        row = self.cache.allocate(req.rid)
-        req.row = row
+    def _start_chunked(self, req: Request):
+        """Stage a prompt longer than the largest bucket for chunked
+        prefill through the decode graph: allocate its row and queue the
+        chunk schedule; ``_step_chunked`` dispatches one chunk per engine
+        iteration."""
+        req.row = self.cache.allocate(req.rid)
         prompt = np.asarray(req.prompt, np.int32)
         n = len(prompt)
         chunks = self._chunk_plan(n)
@@ -394,13 +438,38 @@ class ServeEngine:
         # size the staging buffer for whichever is longer
         padded = np.zeros(max(n, chunks[-1][0] + chunks[-1][1]), np.int32)
         padded[:n] = prompt
-        for off, c in chunks:
-            fn = self._chunk_fn(c)
-            self.cache.caches = fn(
-                self.params, jnp.asarray(padded[off:off + c])[None],
-                jnp.asarray(off, jnp.int32), jnp.asarray(row, jnp.int32),
-                self.cache.caches)
-            self._stats["chunk_steps"] += 1
+        self._chunking.append({"req": req, "prompt": prompt,
+                               "padded": padded, "chunks": chunks,
+                               "next": 0})
+
+    def _step_chunked(self):
+        """Dispatch one pending chunk (round-robin head), writing its KV
+        in-place; when the final chunk is in flight the request joins
+        ``active`` and its first token arrives via the sentinel decode
+        step like any bucket-padded prefill.  No host sync here."""
+        if not self._chunking:
+            return
+        st = self._chunking.pop(0)
+        req, row = st["req"], st["req"].row
+        off, c = st["chunks"][st["next"]]
+        fn = self._chunk_fn(c)
+        self.cache.caches = fn(
+            self.params, jnp.asarray(st["padded"][off:off + c])[None],
+            jnp.asarray(off, jnp.int32), jnp.asarray(row, jnp.int32),
+            self.cache.caches)
+        self._stats["chunk_steps"] += 1
+        self.dispatch_log.append(("chunk", req.rid))
+        st["next"] += 1
+        if st["next"] < len(st["chunks"]):
+            # keep the host length mirror at the chunk frontier: a decode
+            # step interleaved before the next chunk writes one garbage
+            # k/v at this position for the (inactive) row, and the next
+            # chunk's full-slab write overwrites it
+            self.cache.lengths[row] = off + c
+            self._chunking.append(st)          # round-robin: to the back
+            return
+        prompt = st["prompt"]
+        n = len(prompt)
         self._last_ids = self._last_ids.at[row, 0].set(int(prompt[n - 1]))
         self.cache.lengths[row] = n - 1
         self._gen[row] = 0
@@ -480,18 +549,25 @@ class ServeEngine:
         return self.store.get_or_build(("decode", tier), build)
 
     def _compact(self, tier: int):
-        """Restore the prefix invariant: every active row < tier (cache
-        rows relocate on-device; the in-flight step, if any, ordered
-        ahead by data dependencies)."""
-        for src in sorted((r for r in self.active if r >= tier),
-                          reverse=True):
+        """Restore the prefix invariant: every allocated row < tier —
+        active requests *and* in-progress chunked prefills, whose
+        partially-filled cache rows relocate the same way (cache rows
+        move on-device; the in-flight step, if any, ordered ahead by
+        data dependencies)."""
+        chunk_rows = {st["req"].row: st for st in self._chunking}
+        occupied = sorted((r for r in (*self.active, *chunk_rows)
+                           if r >= tier), reverse=True)
+        for src in occupied:
             dst = next(r for r in self.cache.free_rows if r < tier)
             self.cache.move_row(src, dst)
             self._last_ids = self._last_ids.at[dst].set(self._last_ids[src])
             self._gen[dst] = self._gen[src]
-            req = self.active.pop(src)
-            req.row = dst
-            self.active[dst] = req
+            if src in self.active:
+                req = self.active.pop(src)
+                req.row = dst
+                self.active[dst] = req
+            else:
+                chunk_rows[src]["req"].row = dst
             self._stats["row_moves"] += 1
 
     def _dispatch_decode(self):
@@ -501,7 +577,11 @@ class ServeEngine:
         if not self.active:
             return None
         B = self.cfg.max_batch
-        tier = self._tier_for(len(self.active), self.tiers)
+        # the tier must cover every allocated row: chunking rows ride in
+        # the prefix (their frontier-position garbage writes are
+        # overwritten by the next chunk — see _step_chunked)
+        tier = self._tier_for(len(self.active) + len(self._chunking),
+                              self.tiers)
         self._compact(tier)
         active = np.zeros((B,), bool)
         will_end = np.zeros((B,), bool)

@@ -20,8 +20,9 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
+from .._deprecation import warn_once
 from ..core.plan_store import checkpoint_plan_store, resolve_plan_store
-from ..core.scheduler import OpSchedulerBase, ScheduleContext
+from ..core.scheduler import ScheduleContext
 from ..dist import collectives as col
 from ..models.base import build_forward
 from ..optim import AdamWConfig, adamw_init, adamw_update
@@ -102,11 +103,28 @@ def global_grad_norm(grads, pspecs, mesh_info):
     return jnp.sqrt(total)
 
 
-def build_train_step(model, scheduler: OpSchedulerBase, B_loc: int, S: int,
+def build_train_step(model, scheduler, B_loc: int, S: int,
                      cfg: TrainStepConfig,
                      info: Optional[ScheduleContext] = None,
                      plan_store=None, plan_store_path: Optional[str] = None):
+    """Deprecated pre-facade entry point — build the Program instead:
+    ``repro.api.compile(model, policy=...).train_step(...)``."""
+    warn_once("repro.train.build_train_step",
+              "repro.api.compile(...).train_step(...)")
+    return _build_train_step(model, scheduler, B_loc, S, cfg, info,
+                             plan_store=plan_store,
+                             plan_store_path=plan_store_path)
+
+
+def _build_train_step(model, scheduler, B_loc: int, S: int,
+                      cfg: TrainStepConfig,
+                      info: Optional[ScheduleContext] = None,
+                      plan_store=None,
+                      plan_store_path: Optional[str] = None):
     """Returns (train_step, segments, binputs, init_opt).
+
+    ``scheduler`` may be an ``OpSchedulerBase`` or a ``StrategyPolicy``
+    (``build_forward`` resolves policies per segment context).
 
     ``train_step(params, opt_state, batch, step) ->
         (params, opt_state, metrics)``.

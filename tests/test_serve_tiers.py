@@ -226,6 +226,59 @@ def test_chunk_coverage_exactly_one_short_of_prompt(setup):
     assert len(got) == 2 and all(t >= 0 for t in got)
 
 
+def test_injected_store_path_and_budget_contracts(setup, tmp_path):
+    """An injected PlanStore must reject a conflicting config path
+    (silent rebinding would redirect the owner's checkpoints) and honor
+    explicitly-set config budgets."""
+    cfg, model, params = setup
+    store = PlanStore(path=str(tmp_path / "a.dfps"))
+    with pytest.raises(ValueError, match="conflicting persistence"):
+        ServeEngine(model, params, get_strategy("sequential"),
+                    ServeConfig(max_batch=2, s_max=64,
+                                prefill_buckets=(16, 32),
+                                plan_store_path=str(tmp_path / "b.dfps")),
+                    plan_store=store)
+    shared = PlanStore()
+    eng = ServeEngine(model, params, get_strategy("sequential"),
+                      ServeConfig(max_batch=2, s_max=64,
+                                  prefill_buckets=(16, 32),
+                                  exec_capacity=7),
+                      plan_store=shared)
+    assert eng.store is shared and shared.exec_capacity == 7
+
+
+def test_chunked_prefill_fairness_ttft_ordering(setup):
+    """A long chunked prompt submitted first must not monopolize
+    dispatch for len/chunk consecutive steps: short prompts behind it
+    prefill before its chunks finish (round-robin admission) and reach
+    their first token strictly earlier."""
+    cfg, model, params = setup
+    eng = make_engine(model, params)
+    long_pr = (np.arange(40, dtype=np.int32) * 7 + 3) % 100
+    eng.submit(Request(rid=0, prompt=long_pr.copy(), max_new_tokens=3))
+    rng = np.random.default_rng(8)
+    shorts = [rng.integers(0, 100, 8).astype(np.int32) for _ in range(3)]
+    for i, pr in enumerate(shorts, start=1):
+        eng.submit(Request(rid=i, prompt=pr.copy(), max_new_tokens=3))
+    done = {r.rid: r for r in eng.run()}
+    assert len(done) == 4
+    # dispatch interleaving: the shorts' prefill went out before the
+    # long prompt's last chunk (the old engine dispatched every chunk
+    # back-to-back ahead of any waiting admit)
+    log = eng.dispatch_log
+    last_chunk = max(i for i, e in enumerate(log) if e[0] == "chunk")
+    first_prefill = min(i for i, e in enumerate(log) if e[0] == "prefill")
+    assert first_prefill < last_chunk, log
+    # TTFT ordering: every short request saw its first token strictly
+    # before the long one that was submitted ahead of them
+    for i in (1, 2, 3):
+        assert done[i].first_token_s < done[0].first_token_s, i
+    # fairness must not change the long prompt's tokens (vs a solo run)
+    solo = make_engine(model, params)
+    solo.submit(Request(rid=0, prompt=long_pr.copy(), max_new_tokens=3))
+    assert solo.run()[0].output == done[0].output
+
+
 def test_oversized_prompt_rejected(setup):
     cfg, model, params = setup
     eng = make_engine(model, params)
