@@ -24,6 +24,16 @@ Rows (name,value,unit):
   serve/tier_steps_<t>         decode steps run at tier t
   serve/{tiered,baseline}_syncs_per_decode   host syncs per decode step
   serve/chunk_steps            chunked-prefill steps in the trace
+
+With ``--inject`` an additional degraded-mode trace runs the tiered
+engine under the chaos harness (allocation denials, a poisoned request,
+a straggler iteration, a memory-pressure window) with priorities and
+deadlines on the trace, and asserts the lifecycle invariants: every
+non-shed request terminates as Finished or Failed, zero KV rows leak,
+and nothing is stranded.  Extra rows:
+  serve/degraded_tps
+  serve/injected_{shed,preempted,failed,deadline_missed}
+  serve/injected_stranded      must be 0
 """
 import argparse
 import time
@@ -62,8 +72,56 @@ def _run_engine(eng, reqs):
                 ttft_p50_ms=float(np.percentile(ttft, 50)) * 1e3)
 
 
+def _degraded_rows(engine_fn, cfg, requests, max_new):
+    """Run the tiered engine under injected faults and assert the
+    request-lifecycle invariants hold while degraded."""
+    from repro.serve import (
+        BoundedQueue,
+        Failed,
+        FaultInjector,
+        Finished,
+        Shed,
+    )
+    faults = FaultInjector(alloc_fail=(1, 4), poison={3: "decode"},
+                           slow_iters=(2,), slow_s=0.01,
+                           pressure=((5, 8, 4),))
+    eng = engine_fn(faults=faults, admission=BoundedQueue(2 * requests))
+    eng.warmup()
+    rng = np.random.default_rng(7)
+    reqs = _trace(cfg, rng, requests, max_new)
+    for i, r in enumerate(reqs):
+        r.priority = int(rng.integers(0, 3))
+        if i % 3 == 0:
+            r.deadline_s = 60.0
+    t0 = time.perf_counter()
+    for r in reqs:
+        eng.submit(r)
+    done = eng.run()
+    dt = time.perf_counter() - t0
+    st = eng.stats
+
+    # hard invariants: the degraded run is only reportable if the
+    # engine survived it cleanly
+    assert len(done) == len(reqs), "a request went missing"
+    for r in done:
+        assert isinstance(r.result, (Finished, Shed, Failed)), r
+    assert st["submitted"] == st["finished"] + st["shed"] + st["failed"]
+    assert len(eng.cache.free_rows) == eng.cfg.max_batch, "leaked KV rows"
+    assert eng.cache.row_owner == {}, "leaked KV rows"
+    assert st["stranded"] == 0, "degraded run stranded work"
+    ok_toks = sum(len(r.output) for r in done if r.ok)
+    return [
+        f"serve/degraded_tps,{ok_toks / dt:.1f},tok/s",
+        f"serve/injected_shed,{st['shed']},count",
+        f"serve/injected_preempted,{st['preempted']},count",
+        f"serve/injected_failed,{st['failed']},count",
+        f"serve/injected_deadline_missed,{st['deadline_missed']},count",
+        f"serve/injected_stranded,{st['stranded']},count",
+    ]
+
+
 def run(requests: int = 12, max_new: int = 6, strategy: str = "sequential",
-        arch: str = "chatglm3-6b", repeats: int = 3):
+        arch: str = "chatglm3-6b", repeats: int = 3, inject: bool = False):
     import jax
     from repro.configs import get_smoke_config
     from repro.core.strategies import get_strategy
@@ -123,6 +181,8 @@ def run(requests: int = 12, max_new: int = 6, strategy: str = "sequential",
     ]
     for t, n in sorted(st["tier_steps"].items()):
         out.append(f"serve/tier_steps_{t},{n},count")
+    if inject:
+        out.extend(_degraded_rows(engine, cfg, requests, max_new))
     return out
 
 
@@ -132,6 +192,9 @@ if __name__ == "__main__":
     ap.add_argument("--max-new", type=int, default=6)
     ap.add_argument("--repeats", type=int, default=3)
     ap.add_argument("--strategy", default="sequential")
+    ap.add_argument("--inject", action="store_true",
+                    help="add a degraded-mode trace under injected faults")
     args = ap.parse_args()
     print("\n".join(run(requests=args.requests, max_new=args.max_new,
-                        strategy=args.strategy, repeats=args.repeats)))
+                        strategy=args.strategy, repeats=args.repeats,
+                        inject=args.inject)))

@@ -10,14 +10,18 @@ sample order.
 survive (used by tests and the ft example):
   * ``crash``     — raises mid-step (process dies, restart from ckpt)
   * ``straggler`` — delays the step past the deadline (loop re-dispatches)
+
+It is a thin specialization of the shared chaos injector
+(``repro.serve.faults.FaultInjector``), so serve and train exercise one
+deterministic fault mechanism with one ``injected`` event log.
 """
 from __future__ import annotations
 
-import random
 import time
 
 import jax
 
+from ..serve.faults import FaultInjector
 from .checkpoint import restore_latest
 
 
@@ -34,14 +38,17 @@ def elastic_restore(directory: str, example_tree,
     return step, tree, data_state
 
 
-class FailureSimulator:
+class FailureSimulator(FaultInjector):
+    """Train-loop view of the shared injector: ``maybe_fail(step)`` is
+    the single site the loop consults (a step either crashes once, or
+    straggles once)."""
+
     def __init__(self, crash_steps=(), straggle_steps=(),
                  straggle_s: float = 0.5, seed: int = 0):
+        super().__init__(slow_s=straggle_s, seed=seed)
         self.crash_steps = set(crash_steps)
         self.straggle_steps = set(straggle_steps)
         self.straggle_s = straggle_s
-        self.rng = random.Random(seed)
-        self.injected: list = []
 
     def maybe_fail(self, step: int):
         if step in self.crash_steps:

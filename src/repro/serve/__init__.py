@@ -1,2 +1,23 @@
+from .admission import (
+    AdmissionContext,
+    AdmissionPolicy,
+    AdmitAll,
+    BoundedQueue,
+    ChunkingDisabled,
+    DeadlineExceeded,
+    DeadlineGate,
+    EmptyPrompt,
+    EngineDraining,
+    Failed,
+    Finished,
+    Overloaded,
+    PriorityFloor,
+    PromptOverflow,
+    RejectedRequest,
+    Shed,
+    UnchunkablePrompt,
+    admission_chain,
+)
 from .engine import Request, ServeConfig, ServeEngine
-from .kv_cache import KVCacheManager
+from .faults import FaultInjector, InjectedFault, PoisonedRequest
+from .kv_cache import CacheRowError, KVCacheManager

@@ -1,5 +1,7 @@
 """Tiered async serving engine: batch-tier decode captures, batched and
-chunked prefill admission, and a double-buffered host loop.
+chunked prefill admission, a double-buffered host loop, and a hardened
+request lifecycle (admission control, deadlines, preemption, fault
+isolation).
 
 The runtime dispatcher half of the paper's §3.3.2 story, grown into the
 shape the backend thesis demands — a runtime that "manages complex
@@ -39,6 +41,43 @@ eliminate copy overheads":
     single ``jax.device_get`` — one host sync per decode iteration
     instead of one per token-row.
 
+  * **Request lifecycle.**  Robustness policy is decoupled from the
+    dispatch machinery the same way execution policy is decoupled from
+    the model (the paper's transparency claim, applied to survival):
+
+      - *Admission control* — a pluggable ``AdmissionPolicy``
+        (``serve/admission.py``) decides per request against a load
+        snapshot; load shedding terminates a request as a typed
+        ``Shed(reason)`` result instead of stranding it in the queue.
+        Expired deadlines/TTFT budgets always shed (built-in gate).
+      - *Preempt-and-requeue* — under memory pressure or when a
+        higher-priority request is waiting on a full pool, the
+        lowest-priority decoding row is evicted (KV row released, its
+        generated tokens snapshotted host-side) and later re-admitted as
+        a re-prefill over ``prompt + generated`` — through the existing
+        batched or chunked prefill path, preserving the
+        ≤1-sync-per-decode discipline.  Greedy decode makes the resumed
+        token stream bitwise-identical to an uninterrupted run.
+      - *Fault isolation* — dispatch and harvest are wrapped in
+        per-request error boundaries: a targeted ``PoisonedRequest``
+        terminates exactly that request as ``Failed(reason)`` and the
+        dispatch retries with the survivors; an untargeted fault fails
+        only the requests in that dispatch.  The engine itself never
+        dies.
+      - *Graceful drain* — ``drain(timeout)`` stops admitting, finishes
+        in-flight rows, checkpoints the PlanStore, and reports (and
+        releases) stranded work; ``shutdown()`` aborts in-flight work
+        and still checkpoints.
+      - *Chaos harness* — ``ServeConfig.faults`` threads a deterministic
+        ``FaultInjector`` (``serve/faults.py``) through every injection
+        site: allocation denial, poisoned/failed dispatches, slow
+        iterations, and memory-pressure windows that shrink the KV
+        pool's effective capacity.
+
+    Every submitted request terminates in exactly one of ``Finished`` /
+    ``Shed`` / ``Failed`` (``Request.result``), mirrored by the
+    lifecycle counters in ``stats``.
+
 Set ``ServeConfig(decode_tiers=(max_batch,), prefill_batch=1,
 async_host=False)`` to recover the synchronous fixed-batch baseline
 (benchmarked in ``benchmarks/serve_bench.py``).
@@ -60,6 +99,22 @@ from jax import lax
 from ..core.plan_store import PlanStore, resolve_plan_store
 from ..core.scheduler import ScheduleContext
 from ..models.base import build_forward
+from .admission import (
+    AdmissionContext,
+    ChunkingDisabled,
+    DeadlineExceeded,
+    DeadlineGate,
+    EmptyPrompt,
+    EngineDraining,
+    Failed,
+    Finished,
+    Overloaded,
+    PromptOverflow,
+    Shed,
+    UnchunkablePrompt,
+    admission_chain,
+)
+from .faults import PoisonedRequest
 from .kv_cache import KVCacheManager
 
 
@@ -79,12 +134,30 @@ class Request:
     prompt: np.ndarray                 # (prompt_len,) int32
     max_new_tokens: int = 16
     eos_id: int = -1                   # -1: never stop early
+    priority: int = 0                  # higher preempts lower under load
+    deadline_s: Optional[float] = None     # wall-clock budget from submit
+    ttft_budget_s: Optional[float] = None  # budget to the first token
     # filled by the engine:
     output: list = dataclasses.field(default_factory=list)
     row: int = -1
     submitted_s: float = 0.0
     first_token_s: float = 0.0
     done_s: float = 0.0
+    result: object = None              # Finished | Shed | Failed
+    preemptions: int = 0
+    _seq: int = dataclasses.field(default=-1, repr=False)
+    _resume: Optional[np.ndarray] = dataclasses.field(
+        default=None, repr=False)
+
+    @property
+    def effective_prompt(self) -> np.ndarray:
+        """The token stream a (re-)prefill must cover: the original
+        prompt, or prompt + generated tokens after a preemption."""
+        return self._resume if self._resume is not None else self.prompt
+
+    @property
+    def ok(self) -> bool:
+        return isinstance(self.result, Finished)
 
 
 @dataclasses.dataclass
@@ -103,12 +176,25 @@ class ServeConfig:
     prefill_batch: int = 4
     # Chunked prefill: prompts longer than the largest bucket run as
     # chunk-sized steps through the decode graph.  When off, oversized
-    # prompts are rejected at submit() with a ValueError (the pre-tiered
-    # engine raised an opaque numpy broadcast error instead).
+    # prompts are rejected at submit() with a typed ChunkingDisabled
+    # error (the pre-tiered engine raised an opaque numpy broadcast
+    # error instead).
     chunked_prefill: bool = True
     # Double-buffered host loop: dispatch step k+1 before fetching step
     # k's token/done vector.  Off = harvest synchronously every step.
     async_host: bool = True
+    # Admission policy (serve/admission.py).  None = admit everything
+    # well-formed (the pre-hardening behavior); expired deadlines/TTFT
+    # budgets shed regardless via a built-in DeadlineGate.
+    admission: object = None
+    # Preempt-and-requeue: evict the lowest-priority decoding row when a
+    # higher-priority request waits on a full pool or a pressure window
+    # shrinks effective capacity.  With uniform priorities and no
+    # pressure this never triggers.
+    preemption: bool = True
+    # Chaos harness: a deterministic serve.faults.FaultInjector threaded
+    # through allocation, dispatch, harvest, pacing, and capacity.
+    faults: object = None
     # PlanStore budgets: bucketed serving churns through (shape, plan)
     # pairs, so both cache levels are bounded — plans by an LRU byte
     # budget, executables by entry count and an optional byte budget.
@@ -175,6 +261,12 @@ class ServeEngine:
         else:
             self.store = PlanStore(**budgets)
         self._op_config = model.op_closure_config()
+        # the built-in deadline gate always runs first: a request whose
+        # deadline/TTFT budget expired in the queue sheds even under the
+        # default admit-everything policy
+        self.admission = admission_chain(DeadlineGate(), cfg.admission)
+        self._deadline_gate = admission_chain(DeadlineGate())
+        self.faults = cfg.faults
         self.waiting: list[Request] = []
         self.active: dict[int, Request] = {}     # row -> request
         # in-progress chunked prefills: rows are allocated (KV filling
@@ -191,51 +283,129 @@ class ServeEngine:
         self._gen = np.zeros((cfg.max_batch,), np.int32)   # tokens sampled
         self._pending = None               # in-flight decode step handle
         self._pending_prefill: list = []   # [(tok_dev, [(slot, req), ...])]
+        self._seq = 0                      # submission order tiebreaker
+        self._iter = 0                     # engine iteration counter
+        self._cur_iter = 0                 # iteration the loop is inside
+        self._draining = False
         self._stats = {"prefill_steps": 0, "prefill_reqs": 0,
                        "chunk_steps": 0, "decode_steps": 0,
                        "decode_tokens": 0, "host_syncs": 0, "row_moves": 0,
+                       "submitted": 0, "admitted": 0, "finished": 0,
+                       "shed": 0, "failed": 0, "preempted": 0,
+                       "resumed": 0, "deadline_missed": 0,
+                       "alloc_denied": 0, "stranded": 0, "drains": 0,
                        "tier_steps": {t: 0 for t in self.tiers},
                        "tier_builds": {}}
         self._ck = self._cache_keys()
 
     # -- public -----------------------------------------------------------
     def submit(self, req: Request):
+        """Validate and enqueue one request.
+
+        Malformed requests raise a typed :class:`RejectedRequest`
+        subclass (all are ``ValueError``s, with the historical
+        messages).  A request the admission policy sheds at the door
+        terminates immediately as ``Shed(Overloaded)`` — it appears in
+        ``finished``/``run()`` like any other terminal request — and
+        the ``Shed`` decision is returned; ``None`` means admitted."""
+        if self._draining:
+            raise EngineDraining()
+        self._stats["submitted"] += 1
         n = len(req.prompt)
         if n < 1:
-            raise ValueError("empty prompt")
+            raise EmptyPrompt("empty prompt")
         if n > self.cfg.s_max - 1:
-            raise ValueError(
+            raise PromptOverflow(
                 f"prompt length {n} cannot fit s_max={self.cfg.s_max} "
                 "(need at least one decode slot)")
         if n > self.cfg.prefill_buckets[-1]:
             if not self.cfg.chunked_prefill:
-                raise ValueError(
+                raise ChunkingDisabled(
                     f"prompt length {n} exceeds the largest prefill bucket "
                     f"{self.cfg.prefill_buckets[-1]} and chunked prefill "
                     "is disabled")
             self._chunk_plan(n)            # raises if it cannot be chunked
         req.submitted_s = time.perf_counter()
+        req._seq = self._seq
+        self._seq += 1
+        decision = self._decide(req, req.submitted_s)
+        if isinstance(decision, Shed):
+            self._shed_request(req, decision.reason)
+            return decision
+        self._stats["admitted"] += 1
         self.waiting.append(req)
+        return None
+
+    def step(self) -> bool:
+        """One engine iteration: admit, dispatch, harvest.  Returns
+        True while work remains (the unit ``run()`` loops over; exposed
+        so drains and chaos tests can pace the loop themselves)."""
+        it = self._iter
+        self._iter += 1
+        self._cur_iter = it
+        if self.faults is not None:
+            self.faults.on_iter(it)        # injected straggler
+        self._admit()
+        handle = self._dispatch_decode()
+        if self.cfg.async_host:
+            # double-buffered: step k+1 is now in flight; only then
+            # pay the (single) host sync for step k's tokens
+            prev, self._pending = self._pending, handle
+            self._harvest(prev)
+        else:
+            self._harvest(handle)
+        return self._busy()
 
     def run(self, max_iters: int = 10_000) -> list:
+        """Drive the loop until every request terminates (or
+        ``max_iters``).  Exhausting the iteration budget no longer
+        strands in-flight work silently: survivors terminate as
+        ``Failed``, their KV rows are released, and
+        ``stats["stranded"]`` counts them."""
         it = 0
-        while (self.waiting or self.active or self._chunking
-               or self._pending is not None
-               or self._pending_prefill) and it < max_iters:
-            self._admit()
-            handle = self._dispatch_decode()
-            if self.cfg.async_host:
-                # double-buffered: step k+1 is now in flight; only then
-                # pay the (single) host sync for step k's tokens
-                prev, self._pending = self._pending, handle
-                self._harvest(prev)
-            else:
-                self._harvest(handle)
+        while self._busy() and it < max_iters:
+            self.step()
             it += 1
+        if self._busy():
+            self._strand(f"run() exhausted max_iters={max_iters}")
         # idle: the queue drained — checkpoint lowered plans so a restart
         # (or a sibling process) warm-starts instead of re-lowering
         self.checkpoint()
         return self.finished
+
+    def drain(self, timeout: Optional[float] = None) -> dict:
+        """Graceful drain: stop admitting (``submit`` raises
+        :class:`EngineDraining`; already-queued requests shed), finish
+        every in-flight row, checkpoint the PlanStore, and report.  On
+        ``timeout`` (seconds of wall clock) the survivors are stranded:
+        terminated as ``Failed``, rows released, rids reported."""
+        self._draining = True
+        try:
+            for req in list(self.waiting):
+                self._shed_request(req, EngineDraining(
+                    "shed from the queue by drain()"))
+            self.waiting = []
+            t0 = time.perf_counter()
+            stranded: list = []
+            it = 0
+            while self._inflight():
+                if timeout is not None \
+                        and time.perf_counter() - t0 > timeout:
+                    stranded = self._strand(
+                        f"stranded at drain(timeout={timeout})")
+                    break
+                self.step()
+                it += 1
+            n = self.checkpoint()
+            self._stats["drains"] += 1
+            return {"iters": it, "checkpointed": n,
+                    "stranded": stranded,
+                    "finished": self._stats["finished"],
+                    "shed": self._stats["shed"],
+                    "failed": self._stats["failed"],
+                    "free_rows": len(self.cache.free_rows)}
+        finally:
+            self._draining = False
 
     def warmup(self, tiers: Optional[tuple] = None):
         """Build decode captures ahead of traffic (all tiers by default)
@@ -255,8 +425,15 @@ class ServeEngine:
         return self.store.save()
 
     def shutdown(self) -> int:
-        """Checkpoint and release; the engine stays usable afterwards but
-        a well-behaved server calls this exactly once on the way out."""
+        """Abort in-flight work and checkpoint.  Rows held by active,
+        chunking, or pending requests are released (those requests
+        terminate as ``Failed``/``Shed``) so the pool leaks nothing,
+        and the PlanStore checkpoint still runs — a mid-chunked-prefill
+        shutdown must not lose the lowered plans it already paid for.
+        The engine stays usable afterwards but a well-behaved server
+        calls this exactly once on the way out."""
+        if self._busy():
+            self._strand("engine shutdown")
         return self.checkpoint()
 
     @property
@@ -264,7 +441,118 @@ class ServeEngine:
         out = dict(self._stats)
         out["tier_steps"] = dict(self._stats["tier_steps"])
         out["plan_store"] = self.store.snapshot()
+        if self.faults is not None:
+            out["faults"] = self.faults.counts
         return out
+
+    # -- lifecycle --------------------------------------------------------
+    def _busy(self) -> bool:
+        return bool(self.waiting or self._inflight())
+
+    def _inflight(self) -> bool:
+        return bool(self.active or self._chunking
+                    or self._pending is not None or self._pending_prefill)
+
+    def _decide(self, req: Request, now: float, chain=None):
+        """Run the admission chain against a load snapshot."""
+        waited = max(0.0, now - req.submitted_s)
+        deadline_left = (req.submitted_s + req.deadline_s - now
+                         if req.deadline_s is not None else None)
+        ttft_left = (req.submitted_s + req.ttft_budget_s - now
+                     if req.ttft_budget_s is not None
+                     and not req.first_token_s else None)
+        ctx = AdmissionContext(
+            queue_depth=len(self.waiting),
+            active=len(self.active), chunking=len(self._chunking),
+            free_rows=len(self._usable_free_rows()),
+            max_batch=self.cfg.max_batch,
+            prompt_len=len(req.effective_prompt), priority=req.priority,
+            waited_s=waited, deadline_left_s=deadline_left,
+            ttft_left_s=ttft_left)
+        return (chain or self.admission)(ctx)
+
+    def _release_row_of(self, req: Request):
+        row = req.row
+        if row >= 0 and self.cache.row_owner.get(row) == req.rid:
+            self.active.pop(row, None)
+            self.cache.release(row)
+            self._gen[row] = 0
+        req.row = -1
+
+    def _shed_request(self, req: Request, reason):
+        """Terminate a request as ``Shed(reason)`` — a typed result,
+        not a stranded queue entry."""
+        if req.done_s:
+            return
+        req.done_s = time.perf_counter()
+        req.result = Shed(reason)
+        self._release_row_of(req)
+        self._chunking = [st for st in self._chunking
+                          if st["req"] is not req]
+        self._stats["shed"] += 1
+        if isinstance(reason, DeadlineExceeded):
+            self._stats["deadline_missed"] += 1
+        self.finished.append(req)
+
+    def _fail_request(self, req: Request, reason):
+        """Per-request error boundary sink: terminate as
+        ``Failed(reason)``, release the KV row, keep the engine alive."""
+        if req.done_s:
+            return
+        req.done_s = time.perf_counter()
+        req.result = Failed(str(reason))
+        self._release_row_of(req)
+        self._chunking = [st for st in self._chunking
+                          if st["req"] is not req]
+        self._stats["failed"] += 1
+        self.finished.append(req)
+
+    def _finish(self, req: Request, now: float):
+        self.active.pop(req.row, None)
+        if req.row >= 0 and self.cache.row_owner.get(req.row) == req.rid:
+            self.cache.release(req.row)
+            self._gen[req.row] = 0
+        req.row = -1
+        req.done_s = now
+        req.result = Finished()
+        self._stats["finished"] += 1
+        self.finished.append(req)
+
+    def _deadline_blown(self, req: Request, now: float) -> bool:
+        return (req.deadline_s is not None
+                and now > req.submitted_s + req.deadline_s)
+
+    def _fail_deadline(self, req: Request, now: float):
+        self._stats["deadline_missed"] += 1
+        self._fail_request(
+            req, f"deadline {req.deadline_s}s exceeded after "
+                 f"{len(req.output)} tokens")
+
+    def _strand(self, reason: str) -> list:
+        """Release every in-flight row and terminate its request
+        (active/chunking -> ``Failed``, queued -> ``Shed``); returns the
+        stranded rids.  Flushes the pending step first so tokens the
+        device already produced are kept."""
+        self._flush_pending()
+        inflight = list(self.active.values()) \
+            + [st["req"] for st in self._chunking]
+        for req in inflight:
+            self._stats["stranded"] += 1
+            self._fail_request(req, reason)
+        for req in list(self.waiting):
+            self._shed_request(req, Overloaded(reason))
+        self.waiting = []
+        self._chunking = []
+        self._pending = None
+        return [r.rid for r in inflight]
+
+    def _flush_pending(self):
+        """Synchronize: harvest the in-flight decode step and any
+        pending prefill first-token vectors so every request's host-side
+        token list is current (preemption snapshots depend on this)."""
+        if self._pending is not None or self._pending_prefill:
+            self._harvest(self._pending)
+            self._pending = None
 
     # -- admission --------------------------------------------------------
     def _bucket(self, n: int) -> int:
@@ -279,29 +567,139 @@ class ServeEngine:
                 return t
         return tiers[-1]
 
+    def _pressure_rows(self) -> int:
+        return (self.faults.pressure_rows(self._cur_iter)
+                if self.faults is not None else 0)
+
+    def _capacity(self) -> int:
+        """Effective pool capacity: ``max_batch`` minus any rows
+        embargoed by an injected memory-pressure window."""
+        return max(0, self.cfg.max_batch - self._pressure_rows())
+
+    def _usable_free_rows(self) -> list:
+        """Free rows the engine may actually hand out right now —
+        truncated so occupancy never exceeds the effective capacity."""
+        occ = len(self.active) + len(self._chunking)
+        room = max(0, self._capacity() - occ)
+        return self.cache.free_rows[:room]
+
+    def _try_allocate(self, req: Request) -> Optional[int]:
+        """Allocate a KV row under admission control: denies under
+        pressure-shrunk capacity and injected allocation faults (the
+        request stays queued — exhaustion is an admission signal, not
+        an exception)."""
+        if not self._usable_free_rows():
+            return None
+        if self.faults is not None and self.faults.deny_alloc():
+            self._stats["alloc_denied"] += 1
+            return None
+        return self.cache.allocate(req.rid)
+
+    def _shed_expired(self, now: float):
+        """Re-check *deadlines* over the queue: a request that was
+        admissible at submit may have blown its deadline/TTFT budget
+        while waiting for a row.  Load policies (bounded queue,
+        priority floors) do NOT re-run here — admission is a one-time
+        gate, and re-applying a depth bound to already-admitted work
+        would shed the very queue it admitted."""
+        keep = []
+        for req in self.waiting:
+            decision = self._decide(req, now, chain=self._deadline_gate)
+            if isinstance(decision, Shed):
+                self._shed_request(req, decision.reason)
+            else:
+                keep.append(req)
+        self.waiting = keep
+
     def _admit(self):
-        """Fair admission: whole-prompt groups first, then exactly one
-        chunk of the oldest in-progress chunked prefill per iteration
-        (round-robin).  An oversized prompt at the queue head only
-        *stages* its chunk state — its chunks interleave with later
-        iterations' admits instead of monopolizing dispatch for
-        ``len/chunk`` consecutive steps."""
+        """Fair admission under lifecycle control: shed expired work,
+        preempt if pressure/priority demands it, then admit waiting
+        whole-prompt groups (highest priority first, submission order
+        within a priority) and exactly one chunk of the oldest
+        in-progress chunked prefill per iteration (round-robin).  An
+        oversized prompt at the queue head only *stages* its chunk
+        state — its chunks interleave with later iterations' admits
+        instead of monopolizing dispatch for ``len/chunk`` consecutive
+        steps."""
+        now = time.perf_counter()
+        self._shed_expired(now)
+        self._maybe_preempt()
         big = self.cfg.prefill_buckets[-1]
-        while self.waiting and self.cache.free_rows:
-            if len(self.waiting[0].prompt) > big:
-                self._start_chunked(self.waiting.pop(0))
+        self.waiting.sort(key=lambda r: (-r.priority, r._seq))
+        while self.waiting:
+            if not self._usable_free_rows():
+                break
+            head = self.waiting[0]
+            if len(head.effective_prompt) > big:
+                row = self._try_allocate(head)
+                if row is None:
+                    break
+                self._start_chunked(self.waiting.pop(0), row)
                 continue
-            group = []
-            while (self.waiting and self.cache.free_rows
-                   and len(group) < self.cfg.prefill_batch
-                   and len(self.waiting[0].prompt) <= big):
+            group, denied = [], False
+            while (self.waiting and len(group) < self.cfg.prefill_batch
+                   and len(self.waiting[0].effective_prompt) <= big):
+                row = self._try_allocate(self.waiting[0])
+                if row is None:
+                    denied = True
+                    break
                 req = self.waiting.pop(0)
-                req.row = self.cache.allocate(req.rid)
+                req.row = row
                 group.append(req)
             if group:
                 self._dispatch_prefill(group)
+            if denied or not group:
+                break
         self._step_chunked()
 
+    # -- preemption -------------------------------------------------------
+    def _maybe_preempt(self):
+        """Evict decoding rows when the pool must shrink (pressure
+        window pushed occupancy over capacity) or a waiting request
+        outranks the lowest-priority decoding row on a full pool.  The
+        victim's generated tokens are snapshotted host-side, its KV row
+        released, and it re-enters the queue as a re-prefill over
+        ``prompt + generated`` (chunked when the combined length
+        exceeds the largest bucket)."""
+        if not self.cfg.preemption:
+            return
+        # capacity eviction: occupancy must fit the pressured pool
+        while (len(self.active) + len(self._chunking) > self._capacity()
+               and self._preempt_one()):
+            pass
+        # priority eviction: one per iteration is enough — admission
+        # takes the freed row immediately after
+        if self.waiting and not self._usable_free_rows() and self.active:
+            best = max(r.priority for r in self.waiting)
+            live = [r for r in self.active.values() if not r.done_s]
+            if live and best > min(r.priority for r in live):
+                self._preempt_one(max_priority=best - 1)
+
+    def _preempt_one(self, max_priority: Optional[int] = None) -> bool:
+        self._flush_pending()
+        victims = [r for r in self.active.values()
+                   if not r.done_s and r.output
+                   and r.output[-1] != -100
+                   and (max_priority is None
+                        or r.priority <= max_priority)]
+        if not victims:
+            return False
+        # lowest priority first; youngest within a priority (the oldest
+        # request has waited longest for its tokens)
+        victim = min(victims, key=lambda r: (r.priority, -r._seq))
+        self.active.pop(victim.row, None)
+        self.cache.release(victim.row)
+        self._gen[victim.row] = 0
+        victim.row = -1
+        victim.preemptions += 1
+        victim._resume = np.concatenate(
+            [np.asarray(victim.prompt, np.int32),
+             np.asarray(victim.output, np.int32)])
+        self.waiting.append(victim)
+        self._stats["preempted"] += 1
+        return True
+
+    # -- prefill ----------------------------------------------------------
     def _dispatch_prefill(self, group: list):
         """One bucketed prefill call over a real batch of requests.
 
@@ -311,42 +709,70 @@ class ServeEngine:
         token vector together with the next decode harvest.  Group slots
         are padded up to a power-of-two tier; padded slots alias a real
         row and are unrolled *first* so the real row's write wins.
+
+        Error boundary: a ``PoisonedRequest`` excises exactly the named
+        request (it terminates as ``Failed``) and the dispatch retries
+        with the survivors; any other dispatch exception fails the
+        whole group — never the engine.
         """
-        bp = self._tier_for(len(group), self.prefill_tiers)
-        bucket = self._bucket(max(len(r.prompt) for r in group))
-        ids = np.zeros((bp, bucket), np.int32)
-        rows = np.full((bp,), group[0].row, np.int32)
-        full = np.zeros((bp,), bool)
-        sent_last = np.zeros((bp,), np.int32)
-        slots = []
-        for j, req in enumerate(group):
-            n = len(req.prompt)
-            ids[j, :n] = req.prompt[:n]
-            rows[j] = req.row
-            full[j] = n == bucket
-            sent_last[j] = int(req.prompt[n - 1])
-            self._gen[req.row] = 1 if full[j] else 0
-            self.cache.lengths[req.row] = n if full[j] else n - 1
-            self.active[req.row] = req
-            if full[j]:
-                slots.append((j, req))
-            else:
-                # bucket-padded: the cache holds [0, n-1); the first
-                # decode step re-runs prompt[n-1] at position n-1 and
-                # yields the true first token (the -100 sentinel routes
-                # the harvest down the replace path).
-                req.output.append(-100)
-        fn = self._prefill_fn(bp, bucket)
-        tok, self.cache.caches, self._last_ids = fn(
-            self.params, jnp.asarray(ids), jnp.asarray(rows),
-            jnp.asarray(full), jnp.asarray(sent_last),
-            self.cache.caches, self._last_ids)
-        self._stats["prefill_steps"] += 1
-        self._stats["prefill_reqs"] += len(group)
-        self.dispatch_log.append(("prefill",
-                                  tuple(r.rid for r in group)))
-        if slots:
-            self._pending_prefill.append((tok, slots))
+        while group:
+            bp = self._tier_for(len(group), self.prefill_tiers)
+            prompts = [r.effective_prompt for r in group]
+            bucket = self._bucket(max(len(p) for p in prompts))
+            ids = np.zeros((bp, bucket), np.int32)
+            rows = np.full((bp,), group[0].row, np.int32)
+            full = np.zeros((bp,), bool)
+            sent_last = np.zeros((bp,), np.int32)
+            for j, (req, pr) in enumerate(zip(group, prompts)):
+                n = len(pr)
+                ids[j, :n] = pr[:n]
+                rows[j] = req.row
+                full[j] = n == bucket
+                sent_last[j] = int(pr[n - 1])
+            try:
+                if self.faults is not None:
+                    self.faults.check_dispatch(
+                        "prefill", [r.rid for r in group])
+                fn = self._prefill_fn(bp, bucket)
+                tok, self.cache.caches, self._last_ids = fn(
+                    self.params, jnp.asarray(ids), jnp.asarray(rows),
+                    jnp.asarray(full), jnp.asarray(sent_last),
+                    self.cache.caches, self._last_ids)
+            except PoisonedRequest as e:
+                bad = next(r for r in group if r.rid == e.rid)
+                self._fail_request(bad, e)
+                group = [r for r in group if r is not bad]
+                continue
+            except Exception as e:                  # noqa: BLE001
+                for req in group:
+                    self._fail_request(req, f"prefill dispatch failed: {e}")
+                return
+            slots = []
+            for j, (req, pr) in enumerate(zip(group, prompts)):
+                n = len(pr)
+                # tokens already generated pre-preemption count toward
+                # max_new_tokens; a fresh request starts at 0
+                base = len(req.output)
+                if req._resume is not None:
+                    self._stats["resumed"] += 1
+                self._gen[req.row] = base + (1 if full[j] else 0)
+                self.cache.lengths[req.row] = n if full[j] else n - 1
+                self.active[req.row] = req
+                if full[j]:
+                    slots.append((j, req))
+                else:
+                    # bucket-padded: the cache holds [0, n-1); the first
+                    # decode step re-runs the last token at position n-1
+                    # and yields the true next token (the -100 sentinel
+                    # routes the harvest down the replace path).
+                    req.output.append(-100)
+            self._stats["prefill_steps"] += 1
+            self._stats["prefill_reqs"] += len(group)
+            self.dispatch_log.append(("prefill",
+                                      tuple(r.rid for r in group)))
+            if slots:
+                self._pending_prefill.append((tok, slots))
+            return
 
     def _prefill_fn(self, bp: int, bucket: int) -> Callable:
         def build():
@@ -415,7 +841,7 @@ class ServeEngine:
                 fits = [b for b in buckets
                         if b >= rem and off + b <= self.cfg.s_max]
                 if not fits:
-                    raise ValueError(
+                    raise UnchunkablePrompt(
                         f"prompt length {n} cannot be chunk-prefilled "
                         f"within s_max={self.cfg.s_max} with buckets "
                         f"{buckets}")
@@ -424,15 +850,22 @@ class ServeEngine:
             off += c
         return chunks
 
-    def _start_chunked(self, req: Request):
+    def _start_chunked(self, req: Request, row: int):
         """Stage a prompt longer than the largest bucket for chunked
-        prefill through the decode graph: allocate its row and queue the
-        chunk schedule; ``_step_chunked`` dispatches one chunk per engine
-        iteration."""
-        req.row = self.cache.allocate(req.rid)
-        prompt = np.asarray(req.prompt, np.int32)
+        prefill through the decode graph: bind its (pre-allocated) row
+        and queue the chunk schedule; ``_step_chunked`` dispatches one
+        chunk per engine iteration."""
+        req.row = row
+        prompt = np.asarray(req.effective_prompt, np.int32)
         n = len(prompt)
-        chunks = self._chunk_plan(n)
+        try:
+            chunks = self._chunk_plan(n)
+        except UnchunkablePrompt as e:
+            # resumed prompts grew past submit-time validation
+            self._fail_request(req, e)
+            return
+        if req._resume is not None:
+            self._stats["resumed"] += 1
         # chunks cover [0, n-1) and may fall exactly one token short of
         # the prompt (position n-1 travels via the sentinel decode), so
         # size the staging buffer for whichever is longer
@@ -446,17 +879,24 @@ class ServeEngine:
         """Dispatch one pending chunk (round-robin head), writing its KV
         in-place; when the final chunk is in flight the request joins
         ``active`` and its first token arrives via the sentinel decode
-        step like any bucket-padded prefill.  No host sync here."""
+        step like any bucket-padded prefill.  No host sync here.  A
+        dispatch fault fails only this request."""
         if not self._chunking:
             return
         st = self._chunking.pop(0)
         req, row = st["req"], st["req"].row
         off, c = st["chunks"][st["next"]]
-        fn = self._chunk_fn(c)
-        self.cache.caches = fn(
-            self.params, jnp.asarray(st["padded"][off:off + c])[None],
-            jnp.asarray(off, jnp.int32), jnp.asarray(row, jnp.int32),
-            self.cache.caches)
+        try:
+            if self.faults is not None:
+                self.faults.check_dispatch("chunk", [req.rid])
+            fn = self._chunk_fn(c)
+            self.cache.caches = fn(
+                self.params, jnp.asarray(st["padded"][off:off + c])[None],
+                jnp.asarray(off, jnp.int32), jnp.asarray(row, jnp.int32),
+                self.cache.caches)
+        except Exception as e:                      # noqa: BLE001
+            self._fail_request(req, f"chunk dispatch failed: {e}")
+            return
         self._stats["chunk_steps"] += 1
         self.dispatch_log.append(("chunk", req.rid))
         st["next"] += 1
@@ -472,7 +912,7 @@ class ServeEngine:
         n = len(prompt)
         self._last_ids = self._last_ids.at[row, 0].set(int(prompt[n - 1]))
         self.cache.lengths[row] = n - 1
-        self._gen[row] = 0
+        self._gen[row] = len(req.output)
         req.output.append(-100)
         self.active[row] = req
 
@@ -573,46 +1013,67 @@ class ServeEngine:
     def _dispatch_decode(self):
         """Dispatch one decode step at the smallest covering tier.
         Returns an opaque handle ``(tok_dev, done_dev, snapshot)`` the
-        harvest consumes — in async mode one loop iteration later."""
-        if not self.active:
-            return None
-        B = self.cfg.max_batch
-        # the tier must cover every allocated row: chunking rows ride in
-        # the prefix (their frontier-position garbage writes are
-        # overwritten by the next chunk — see _step_chunked)
-        tier = self._tier_for(len(self.active) + len(self._chunking),
-                              self.tiers)
-        self._compact(tier)
-        active = np.zeros((B,), bool)
-        will_end = np.zeros((B,), bool)
-        eos = np.full((B,), -1, np.int32)
-        snapshot = []
-        for row, req in self.active.items():
-            active[row] = True
-            eos[row] = req.eos_id
-            will_end[row] = (self._gen[row] + 1 >= req.max_new_tokens
-                             or self.cache.lengths[row] + 1
-                             >= self.cfg.s_max - 1)
-            snapshot.append((row, req))
-        fn = self._decode_fn(tier)
-        tok, done, self._last_ids, self.cache.caches = fn(
-            self.params, self._last_ids, self.cache.cache_len_array(),
-            jnp.asarray(active), jnp.asarray(eos), jnp.asarray(will_end),
-            self.cache.caches)
-        # host mirrors advance at dispatch, not harvest: the device's
-        # view of every row is derivable without a sync
-        for row, _ in snapshot:
-            self.cache.lengths[row] += 1
-            self._gen[row] += 1
-        self._stats["decode_steps"] += 1
-        self._stats["tier_steps"][tier] += 1
-        return (tok, done, snapshot)
+        harvest consumes — in async mode one loop iteration later.
+
+        Error boundary: a ``PoisonedRequest`` fails exactly that row
+        and the dispatch retries with the survivors; any other dispatch
+        exception fails the rows in this dispatch (blast radius is the
+        batch, never the engine)."""
+        while self.active:
+            B = self.cfg.max_batch
+            # the tier must cover every allocated row: chunking rows ride
+            # in the prefix (their frontier-position garbage writes are
+            # overwritten by the next chunk — see _step_chunked)
+            tier = self._tier_for(len(self.active) + len(self._chunking),
+                                  self.tiers)
+            self._compact(tier)
+            active = np.zeros((B,), bool)
+            will_end = np.zeros((B,), bool)
+            eos = np.full((B,), -1, np.int32)
+            snapshot = []
+            for row, req in self.active.items():
+                active[row] = True
+                eos[row] = req.eos_id
+                will_end[row] = (self._gen[row] + 1 >= req.max_new_tokens
+                                 or self.cache.lengths[row] + 1
+                                 >= self.cfg.s_max - 1)
+                snapshot.append((row, req))
+            try:
+                if self.faults is not None:
+                    self.faults.check_dispatch(
+                        "decode", [r.rid for _, r in snapshot])
+                fn = self._decode_fn(tier)
+                tok, done, self._last_ids, self.cache.caches = fn(
+                    self.params, self._last_ids,
+                    self.cache.cache_len_array(),
+                    jnp.asarray(active), jnp.asarray(eos),
+                    jnp.asarray(will_end), self.cache.caches)
+            except PoisonedRequest as e:
+                bad = next(r for _, r in snapshot if r.rid == e.rid)
+                self._fail_request(bad, e)
+                continue
+            except Exception as e:                  # noqa: BLE001
+                for _, req in snapshot:
+                    self._fail_request(req, f"decode dispatch failed: {e}")
+                return None
+            # host mirrors advance at dispatch, not harvest: the device's
+            # view of every row is derivable without a sync
+            for row, _ in snapshot:
+                self.cache.lengths[row] += 1
+                self._gen[row] += 1
+            self._stats["decode_steps"] += 1
+            self._stats["tier_steps"][tier] += 1
+            return (tok, done, snapshot)
+        return None
 
     # -- harvest ----------------------------------------------------------
     def _harvest(self, pending):
         """The loop's single host sync: fetch the pending decode step's
         token/done vectors (plus any prefill first-token vectors) in one
-        ``device_get`` and run the host bookkeeping."""
+        ``device_get`` and run the host bookkeeping.  Each request's
+        bookkeeping runs inside its own error boundary — a poisoned
+        request terminates as ``Failed`` without touching its
+        batchmates."""
         prefills, self._pending_prefill = self._pending_prefill, []
         if pending is None and not prefills:
             return
@@ -628,11 +1089,19 @@ class ServeEngine:
             for j, req in slots:
                 if req.done_s:
                     continue
-                req.output.append(int(toks[j]))
-                req.first_token_s = now
-                if (len(req.output) >= req.max_new_tokens
-                        or req.output[-1] == req.eos_id):
-                    self._finish(req, now)
+                try:
+                    if self.faults is not None:
+                        self.faults.check_harvest(req.rid)
+                    req.output.append(int(toks[j]))
+                    if not req.first_token_s:
+                        req.first_token_s = now
+                    if (len(req.output) >= req.max_new_tokens
+                            or req.output[-1] == req.eos_id):
+                        self._finish(req, now)
+                    elif self._deadline_blown(req, now):
+                        self._fail_deadline(req, now)
+                except Exception as e:              # noqa: BLE001
+                    self._fail_request(req, f"harvest failed: {e}")
         if pending is None:
             return
         tok, done, snapshot = np.asarray(vals[0]), np.asarray(vals[1]), \
@@ -640,23 +1109,23 @@ class ServeEngine:
         for row, req in snapshot:
             if req.done_s:       # finished by an earlier harvest: the
                 continue         # in-flight step decoded a stale row
-            t = int(tok[row])
-            if req.output and req.output[0] == -100:
-                req.output[0] = t          # sentinel: first real token
-                if not req.first_token_s:
-                    req.first_token_s = now
-            else:
-                req.output.append(t)
-            self._stats["decode_tokens"] += 1
-            if done[row]:
-                self._finish(req, now)
-
-    def _finish(self, req: Request, now: float):
-        req.done_s = now
-        self.active.pop(req.row, None)
-        self.cache.release(req.row)
-        self._gen[req.row] = 0
-        self.finished.append(req)
+            try:
+                if self.faults is not None:
+                    self.faults.check_harvest(req.rid)
+                t = int(tok[row])
+                if req.output and req.output[-1] == -100:
+                    req.output[-1] = t     # sentinel: first real token
+                    if not req.first_token_s:
+                        req.first_token_s = now
+                else:
+                    req.output.append(t)
+                self._stats["decode_tokens"] += 1
+                if done[row]:
+                    self._finish(req, now)
+                elif self._deadline_blown(req, now):
+                    self._fail_deadline(req, now)
+            except Exception as e:                  # noqa: BLE001
+                self._fail_request(req, f"harvest failed: {e}")
 
     # -- cache key mapping --------------------------------------------------
     def _cache_keys(self):

@@ -23,6 +23,14 @@ import numpy as np
 from jax import lax
 
 
+class CacheRowError(RuntimeError):
+    """Row bookkeeping violation: double release, releasing a row that
+    was never allocated, or an invalid ``move_row``.  These are engine
+    bugs (or deliberate chaos probes), never load conditions — tolerate
+    them silently and a leaked or doubly-freed row corrupts a *later*
+    request's cache, far from the cause."""
+
+
 class KVCacheManager:
     def __init__(self, model, max_batch: int, s_max: int):
         self.max_batch = max_batch
@@ -48,7 +56,12 @@ class KVCacheManager:
         return row
 
     def release(self, row: int):
-        self.row_owner.pop(row, None)
+        if row not in self.row_owner:
+            raise CacheRowError(
+                f"release of row {row} which is not allocated "
+                f"(double release or unknown row; active rows: "
+                f"{sorted(self.row_owner)})")
+        self.row_owner.pop(row)
         self.lengths[row] = 0
         self.free_rows.append(row)
         self.free_rows.sort()
@@ -58,7 +71,15 @@ class KVCacheManager:
         compaction).  Device-side: one slice + one dynamic_update_slice
         per cache tensor, dispatched asynchronously — the copies order
         behind any in-flight step through data dependencies."""
-        assert dst in self.free_rows and src in self.row_owner, (src, dst)
+        if src == dst:
+            raise CacheRowError(f"move_row src == dst == {src}")
+        if src not in self.row_owner:
+            raise CacheRowError(
+                f"move_row src {src} is not an active row "
+                f"(active: {sorted(self.row_owner)})")
+        if dst not in self.free_rows:
+            raise CacheRowError(f"move_row dst {dst} is not free "
+                                f"(free: {self.free_rows})")
         for k, c in self.caches.items():
             bd = self.batch_dims[k]
             row = lax.slice_in_dim(c, src, src + 1, axis=bd)

@@ -1,0 +1,488 @@
+"""Request-lifecycle hardening tests: admission control, deadlines,
+preempt-and-requeue, fault isolation, drain/shutdown, and the chaos
+harness.
+
+The contract under test (the robustness acceptance criteria): under
+injected allocation failures, dispatch exceptions, and memory pressure,
+every submitted request terminates in exactly one of
+{Finished, Shed, Failed} with matching stats counters, zero leaked KV
+rows (pool fully free after drain), and preempted-then-resumed requests
+produce bitwise-identical tokens to an uninterrupted run."""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.core.strategies import get_strategy
+from repro.models.layers import MeshInfo
+from repro.models.registry import build_model
+from repro.serve import (
+    BoundedQueue,
+    CacheRowError,
+    ChunkingDisabled,
+    EmptyPrompt,
+    EngineDraining,
+    Failed,
+    FaultInjector,
+    Finished,
+    KVCacheManager,
+    Overloaded,
+    PromptOverflow,
+    RejectedRequest,
+    Request,
+    ServeConfig,
+    ServeEngine,
+    Shed,
+)
+from repro.serve.admission import (
+    AdmissionContext,
+    AdmitAll,
+    DeadlineGate,
+    PriorityFloor,
+    admission_chain,
+)
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = get_smoke_config("chatglm3-6b")
+    model = build_model(cfg, MeshInfo(tp=1, dp=1))
+    segs, _ = model.build_segments("prefill", 1, 32, s_max=64)
+    params = model._init_from_segments(segs, jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+def make_engine(model, params, **kw):
+    kw.setdefault("max_batch", 4)
+    kw.setdefault("s_max", 64)
+    kw.setdefault("prefill_buckets", (16, 32))
+    return ServeEngine(model, params, get_strategy("sequential"),
+                       ServeConfig(**kw))
+
+
+def prompts_for(n, seed=0, lo=4, hi=14):
+    rng = np.random.default_rng(seed)
+    return [rng.integers(0, 100, int(rng.integers(lo, hi)))
+            .astype(np.int32) for _ in range(n)]
+
+
+def assert_lifecycle_clean(eng, submitted):
+    """Every submitted request reached exactly one terminal state, the
+    counters agree, and the KV pool leaked nothing."""
+    st = eng.stats
+    assert len(eng.finished) == submitted, (len(eng.finished), submitted)
+    for r in eng.finished:
+        assert isinstance(r.result, (Finished, Shed, Failed)), r
+        assert r.done_s > 0, r
+        assert r.row == -1, r
+    kinds = {"finished": 0, "shed": 0, "failed": 0}
+    for r in eng.finished:
+        kinds[{Finished: "finished", Shed: "shed",
+               Failed: "failed"}[type(r.result)]] += 1
+    assert kinds["finished"] == st["finished"], (kinds, st)
+    assert kinds["shed"] == st["shed"], (kinds, st)
+    assert kinds["failed"] == st["failed"], (kinds, st)
+    assert st["submitted"] == submitted
+    assert st["finished"] + st["shed"] + st["failed"] == submitted
+    # zero leaked rows: the pool is fully free and owner-less
+    assert len(eng.cache.free_rows) == eng.cfg.max_batch
+    assert eng.cache.row_owner == {}
+    assert not eng.active and not eng._chunking and not eng.waiting
+
+
+# -- typed submit rejects (satellite: RejectedRequest hierarchy) ------------
+
+def test_rejected_request_hierarchy(setup):
+    cfg, model, params = setup
+    eng = make_engine(model, params)
+    with pytest.raises(EmptyPrompt):
+        eng.submit(Request(rid=0, prompt=np.zeros(0, np.int32)))
+    # every typed reject is still a ValueError with the old message
+    with pytest.raises(ValueError, match="s_max"):
+        eng.submit(Request(rid=1, prompt=np.zeros(64, np.int32)))
+    with pytest.raises(PromptOverflow):
+        eng.submit(Request(rid=2, prompt=np.zeros(64, np.int32)))
+    eng2 = make_engine(model, params, chunked_prefill=False)
+    with pytest.raises(ValueError, match="largest prefill bucket"):
+        eng2.submit(Request(rid=3, prompt=np.arange(40, dtype=np.int32)))
+    with pytest.raises(ChunkingDisabled):
+        eng2.submit(Request(rid=4, prompt=np.arange(40, dtype=np.int32)))
+    assert issubclass(Overloaded, RejectedRequest)
+    assert issubclass(RejectedRequest, ValueError)
+    # rejects never queued anything
+    assert not eng.waiting and not eng2.waiting
+
+
+# -- admission policies ------------------------------------------------------
+
+def test_bounded_queue_sheds_typed_overloaded(setup):
+    cfg, model, params = setup
+    eng = make_engine(model, params,
+                      admission=BoundedQueue(3), prefill_batch=2)
+    n = 8
+    decisions = [eng.submit(Request(rid=i, prompt=pr, max_new_tokens=3))
+                 for i, pr in enumerate(prompts_for(n, seed=1))]
+    shed = [d for d in decisions if isinstance(d, Shed)]
+    assert shed and all(isinstance(d.reason, Overloaded) for d in shed)
+    done = eng.run()
+    assert_lifecycle_clean(eng, n)
+    st = eng.stats
+    assert st["shed"] == len(shed) > 0
+    assert st["finished"] == n - len(shed)
+    # shed requests carry the typed result, admitted ones all finished
+    for r in done:
+        if isinstance(r.result, Shed):
+            assert isinstance(r.result.reason, Overloaded)
+            assert r.output == []
+        else:
+            assert len(r.output) == 3
+
+
+def test_priority_floor_and_chain_identity():
+    chain = admission_chain(DeadlineGate(), BoundedQueue(4),
+                            PriorityFloor(2, when_queue_over=1))
+    # identities are stable, reproducible tuples (mirroring
+    # StrategyPolicy): two equal chains agree, different params differ
+    chain2 = admission_chain(DeadlineGate(), BoundedQueue(4),
+                             PriorityFloor(2, when_queue_over=1))
+    assert chain.identity() == chain2.identity()
+    assert chain.identity() != admission_chain(BoundedQueue(5)).identity()
+    ctx = AdmissionContext(queue_depth=2, active=0, chunking=0,
+                           free_rows=0, max_batch=4, prompt_len=8,
+                           priority=0, waited_s=0.0,
+                           deadline_left_s=None, ttft_left_s=None)
+    d = chain(ctx)
+    assert isinstance(d, Shed)          # below the priority floor
+    assert AdmitAll()(ctx).ok
+
+
+def test_deadline_expired_in_queue_sheds(setup):
+    """The built-in DeadlineGate runs even under the default policy: a
+    request whose deadline expired while queued sheds instead of
+    wasting decode steps."""
+    cfg, model, params = setup
+    eng = make_engine(model, params, max_batch=1, prefill_batch=1)
+    live = Request(rid=0, prompt=prompts_for(1, seed=2)[0],
+                   max_new_tokens=8)
+    dead = Request(rid=1, prompt=prompts_for(1, seed=3)[0],
+                   max_new_tokens=2, deadline_s=0.0)
+    eng.submit(live)
+    eng.submit(dead)                   # expires while rid 0 holds the row
+    eng.run()
+    assert_lifecycle_clean(eng, 2)
+    assert isinstance(live.result, Finished)
+    assert isinstance(dead.result, Shed)
+    assert eng.stats["deadline_missed"] == 1
+
+
+# -- chaos: allocation failures ---------------------------------------------
+
+def test_injected_alloc_failures_delay_but_never_lose(setup):
+    cfg, model, params = setup
+    faults = FaultInjector(alloc_fail=(0, 1, 3))
+    eng = make_engine(model, params, faults=faults)
+    n = 5
+    for i, pr in enumerate(prompts_for(n, seed=4)):
+        eng.submit(Request(rid=i, prompt=pr, max_new_tokens=4))
+    done = eng.run()
+    assert_lifecycle_clean(eng, n)
+    assert all(isinstance(r.result, Finished) for r in done)
+    assert eng.stats["alloc_denied"] == 3
+    assert faults.counts.get("alloc_fail") == 3
+    # denial only delays: outputs match a fault-free engine exactly
+    clean = make_engine(model, params)
+    for i, pr in enumerate(prompts_for(n, seed=4)):
+        clean.submit(Request(rid=i, prompt=pr, max_new_tokens=4))
+    want = {r.rid: r.output for r in clean.run()}
+    assert {r.rid: r.output for r in done} == want
+
+
+# -- chaos: dispatch faults + isolation -------------------------------------
+
+def test_poisoned_prefill_isolated_to_one_request(setup):
+    """A poisoned request inside a batched prefill group fails alone;
+    its groupmates retry and produce exactly their fault-free tokens."""
+    cfg, model, params = setup
+    n = 4
+    faults = FaultInjector(poison={1: "prefill"})
+    eng = make_engine(model, params, faults=faults, prefill_batch=4)
+    for i, pr in enumerate(prompts_for(n, seed=5)):
+        eng.submit(Request(rid=i, prompt=pr, max_new_tokens=3))
+    done = {r.rid: r for r in eng.run()}
+    assert_lifecycle_clean(eng, n)
+    assert isinstance(done[1].result, Failed)
+    assert "poisoned" in done[1].result.reason
+    clean = make_engine(model, params)
+    for i, pr in enumerate(prompts_for(n, seed=5)):
+        if i != 1:
+            clean.submit(Request(rid=i, prompt=pr, max_new_tokens=3))
+    want = {r.rid: r.output for r in clean.run()}
+    for rid, out in want.items():
+        assert done[rid].output == out, rid
+
+
+def test_poisoned_decode_and_harvest_isolated(setup):
+    cfg, model, params = setup
+    for site in ("decode", "harvest"):
+        faults = FaultInjector(poison={2: site})
+        eng = make_engine(model, params, faults=faults)
+        n = 4
+        for i, pr in enumerate(prompts_for(n, seed=6)):
+            eng.submit(Request(rid=i, prompt=pr, max_new_tokens=4))
+        done = {r.rid: r for r in eng.run()}
+        assert_lifecycle_clean(eng, n)
+        assert isinstance(done[2].result, Failed), site
+        survivors = [r for rid, r in done.items() if rid != 2]
+        assert all(isinstance(r.result, Finished) for r in survivors), site
+        assert all(len(r.output) == 4 for r in survivors), site
+
+
+def test_generic_dispatch_fault_fails_only_that_dispatch(setup):
+    """An untargeted InjectedFault kills the requests in that dispatch
+    (blast radius: the batch) but the engine survives and serves later
+    submissions."""
+    cfg, model, params = setup
+    faults = FaultInjector(dispatch_fail=(("prefill", 0),))
+    eng = make_engine(model, params, faults=faults, prefill_batch=2)
+    for i, pr in enumerate(prompts_for(2, seed=7)):
+        eng.submit(Request(rid=i, prompt=pr, max_new_tokens=3))
+    eng.run()
+    assert all(isinstance(r.result, Failed) for r in eng.finished)
+    # the engine is still alive: a second wave is served normally
+    for i, pr in enumerate(prompts_for(2, seed=8), start=2):
+        eng.submit(Request(rid=i, prompt=pr, max_new_tokens=3))
+    done = {r.rid: r for r in eng.run()}
+    assert_lifecycle_clean(eng, 4)
+    assert isinstance(done[2].result, Finished)
+    assert isinstance(done[3].result, Finished)
+
+
+def test_poisoned_chunked_prefill_releases_row(setup):
+    cfg, model, params = setup
+    faults = FaultInjector(poison={0: "chunk"})
+    eng = make_engine(model, params, faults=faults)
+    long_pr = (np.arange(40, dtype=np.int32) * 7 + 3) % 100
+    eng.submit(Request(rid=0, prompt=long_pr, max_new_tokens=3))
+    eng.submit(Request(rid=1, prompt=prompts_for(1, seed=9)[0],
+                       max_new_tokens=3))
+    done = {r.rid: r for r in eng.run()}
+    assert_lifecycle_clean(eng, 2)
+    assert isinstance(done[0].result, Failed)
+    assert isinstance(done[1].result, Finished)
+
+
+# -- preempt-and-requeue -----------------------------------------------------
+
+def test_priority_preemption_resumes_bitwise_identical(setup):
+    """A higher-priority request arriving on a full pool evicts the
+    low-priority decoding row; the victim re-admits as a re-prefill
+    over prompt+generated and its final tokens are bitwise-identical
+    to an uninterrupted run."""
+    cfg, model, params = setup
+    pr_low = prompts_for(1, seed=10)[0]
+    pr_high = prompts_for(1, seed=11)[0]
+
+    solo = make_engine(model, params, max_batch=1)
+    solo.submit(Request(rid=0, prompt=pr_low.copy(), max_new_tokens=10))
+    want = solo.run()[0].output
+
+    eng = make_engine(model, params, max_batch=1)
+    low = Request(rid=0, prompt=pr_low.copy(), max_new_tokens=10,
+                  priority=0)
+    eng.submit(low)
+    for _ in range(4):                  # let the victim produce tokens
+        eng.step()
+    high = Request(rid=1, prompt=pr_high.copy(), max_new_tokens=3,
+                   priority=5)
+    eng.submit(high)
+    done = {r.rid: r for r in eng.run()}
+    assert_lifecycle_clean(eng, 2)
+    assert low.preemptions >= 1
+    assert eng.stats["preempted"] >= 1
+    assert eng.stats["resumed"] >= 1
+    assert isinstance(done[0].result, Finished)
+    assert isinstance(done[1].result, Finished)
+    assert done[0].output == want, "preempted run diverged"
+    # the high-priority request actually cut the line: its first token
+    # arrived before the preempted request finished
+    assert done[1].first_token_s < done[0].done_s
+
+
+def test_preempted_long_resume_goes_chunked(setup):
+    """A resume whose prompt+generated exceeds the largest bucket
+    re-prefills through the chunked path and still matches solo."""
+    cfg, model, params = setup
+    pr_low = prompts_for(1, seed=12, lo=28, hi=31)[0]   # near the bucket
+
+    solo = make_engine(model, params, max_batch=1)
+    solo.submit(Request(rid=0, prompt=pr_low.copy(), max_new_tokens=12))
+    want = solo.run()[0].output
+
+    eng = make_engine(model, params, max_batch=1)
+    low = Request(rid=0, prompt=pr_low.copy(), max_new_tokens=12)
+    eng.submit(low)
+    for _ in range(8):                  # > bucket - len(prompt) tokens
+        eng.step()
+    eng.submit(Request(rid=1, prompt=prompts_for(1, seed=13)[0],
+                       max_new_tokens=2, priority=9))
+    done = {r.rid: r for r in eng.run()}
+    assert_lifecycle_clean(eng, 2)
+    assert low.preemptions >= 1
+    assert len(low.prompt) + 12 > eng.cfg.prefill_buckets[-1]
+    assert done[0].output == want
+    assert eng.stats["chunk_steps"] > 0    # the resume chunked
+
+
+def test_pressure_window_preempts_and_recovers(setup):
+    """An injected memory-pressure window shrinks effective capacity;
+    the engine evicts decoding rows to fit, re-admits them after the
+    window, and every request still produces its fault-free tokens."""
+    cfg, model, params = setup
+    n = 4
+    clean = make_engine(model, params)
+    for i, pr in enumerate(prompts_for(n, seed=14)):
+        clean.submit(Request(rid=i, prompt=pr, max_new_tokens=6))
+    want = {r.rid: r.output for r in clean.run()}
+
+    faults = FaultInjector(pressure=((2, 5, 3),))   # capacity 4 -> 1
+    eng = make_engine(model, params, faults=faults)
+    for i, pr in enumerate(prompts_for(n, seed=14)):
+        eng.submit(Request(rid=i, prompt=pr, max_new_tokens=6))
+    done = {r.rid: r for r in eng.run()}
+    assert_lifecycle_clean(eng, n)
+    assert eng.stats["preempted"] >= 1
+    assert all(isinstance(r.result, Finished) for r in done.values())
+    assert {rid: r.output for rid, r in done.items()} == want
+
+
+# -- stranded work: run(max_iters), drain, shutdown -------------------------
+
+def test_run_max_iters_surfaces_stranded_rows(setup):
+    cfg, model, params = setup
+    eng = make_engine(model, params)
+    for i, pr in enumerate(prompts_for(3, seed=15)):
+        eng.submit(Request(rid=i, prompt=pr, max_new_tokens=50))
+    done = eng.run(max_iters=2)
+    # nothing silently stranded: every request terminated, rows free
+    assert_lifecycle_clean(eng, 3)
+    st = eng.stats
+    assert st["stranded"] + st["shed"] == 3
+    assert st["stranded"] > 0
+    assert any(isinstance(r.result, Failed)
+               and "max_iters" in r.result.reason for r in done)
+
+
+def test_drain_finishes_inflight_sheds_queue(setup):
+    cfg, model, params = setup
+    eng = make_engine(model, params, max_batch=2, prefill_batch=2)
+    for i, pr in enumerate(prompts_for(4, seed=16)):
+        eng.submit(Request(rid=i, prompt=pr, max_new_tokens=4))
+    eng.step()                          # two admitted, two queued
+    report = eng.drain()
+    assert_lifecycle_clean(eng, 4)
+    assert report["stranded"] == []
+    assert report["free_rows"] == 2
+    assert eng.stats["finished"] == 2 and eng.stats["shed"] == 2
+    with pytest.raises(EngineDraining):
+        # during the drain submits are hard-rejected; afterwards the
+        # engine re-opens
+        eng._draining = True
+        eng.submit(Request(rid=9, prompt=prompts_for(1, seed=17)[0]))
+    eng._draining = False
+    eng.submit(Request(rid=10, prompt=prompts_for(1, seed=17)[0],
+                       max_new_tokens=2))
+    eng.run()
+    assert eng.stats["finished"] == 3
+
+
+def test_drain_timeout_reports_and_releases_stranded(setup):
+    cfg, model, params = setup
+    eng = make_engine(model, params)
+    eng.submit(Request(rid=0, prompt=prompts_for(1, seed=18)[0],
+                       max_new_tokens=500))   # will not finish in time
+    eng.step()
+    report = eng.drain(timeout=0.0)
+    assert report["stranded"] == [0]
+    assert_lifecycle_clean(eng, 1)
+    assert eng.stats["stranded"] == 1
+
+
+def test_shutdown_mid_chunked_prefill_releases_and_checkpoints(
+        setup, tmp_path):
+    """Satellite: shutdown() while a chunked prefill is in flight must
+    release the _chunking row and still checkpoint the PlanStore (dirty
+    flag honored — a second shutdown writes nothing)."""
+    cfg, model, params = setup
+    path = str(tmp_path / "chaos.dfps")
+    eng = make_engine(model, params, plan_store_path=path)
+    long_pr = (np.arange(40, dtype=np.int32) * 5 + 1) % 100
+    eng.submit(Request(rid=0, prompt=long_pr, max_new_tokens=3))
+    eng._admit()                        # stages + dispatches one chunk
+    assert eng._chunking, "precondition: a chunked prefill is in flight"
+    wrote = eng.shutdown()
+    assert wrote >= 1                   # the chunk lowering checkpointed
+    assert (tmp_path / "chaos.dfps").exists()
+    assert_lifecycle_clean(eng, 1)
+    assert isinstance(eng.finished[0].result, Failed)
+    assert eng.shutdown() == 0          # clean store: no rewrite
+
+
+# -- cache row bookkeeping (satellite: typed errors) ------------------------
+
+def test_release_and_move_row_typed_errors(setup):
+    cfg, model, params = setup
+    cache = KVCacheManager(model, 4, 64)
+    row = cache.allocate(7)
+    cache.release(row)
+    with pytest.raises(CacheRowError, match="double release|not allocated"):
+        cache.release(row)
+    with pytest.raises(CacheRowError):
+        cache.release(99)
+    r0 = cache.allocate(1)
+    with pytest.raises(CacheRowError, match="src == dst"):
+        cache.move_row(r0, r0)
+    with pytest.raises(CacheRowError, match="not an active row"):
+        cache.move_row(3, 2)
+    cache.allocate(2)                   # row 1 now owned -> not free
+    with pytest.raises(CacheRowError, match="not free"):
+        cache.move_row(r0, 1)
+
+
+# -- the full chaos soup -----------------------------------------------------
+
+def test_chaos_soup_every_request_terminates_exactly_once(setup):
+    """Everything at once: bounded queue, deadlines, priorities,
+    allocation denials, a poisoned request, a generic dispatch fault,
+    a straggler iteration, and a memory-pressure window.  Every request
+    must reach exactly one terminal state with matching counters and a
+    fully-free pool."""
+    cfg, model, params = setup
+    faults = FaultInjector(alloc_fail=(2,), poison={5: "decode"},
+                           dispatch_fail=(("chunk", 1),),
+                           slow_iters=(3,), slow_s=0.01,
+                           pressure=((6, 8, 2),))
+    eng = make_engine(model, params, admission=BoundedQueue(6),
+                      faults=faults, prefill_batch=2)
+    rng = np.random.default_rng(19)
+    n = 10
+    for i in range(n):
+        if i == 4:
+            pr = (np.arange(44, dtype=np.int32) * 3 + 1) % 100  # chunked
+        else:
+            pr = rng.integers(0, 100, int(rng.integers(4, 14))) \
+                .astype(np.int32)
+        eng.submit(Request(rid=i, prompt=pr,
+                           max_new_tokens=int(rng.integers(2, 7)),
+                           priority=int(rng.integers(0, 3)),
+                           deadline_s=None if i % 4 else 30.0))
+    eng.run()
+    assert_lifecycle_clean(eng, n)
+    st = eng.stats
+    assert st["failed"] >= 1            # the poisoned + faulted requests
+    assert st["alloc_denied"] >= 1
+    assert faults.counts.get("slow") == 1
+    # a second, fault-free wave confirms the engine is still healthy
+    for i, pr in enumerate(prompts_for(3, seed=20), start=n):
+        eng.submit(Request(rid=i, prompt=pr, max_new_tokens=3))
+    eng.run()
+    assert_lifecycle_clean(eng, n + 3)
