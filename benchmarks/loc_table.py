@@ -24,7 +24,8 @@ EXAMPLES = ("examples/quickstart.py", "examples/serve_batched.py",
 # pre-facade entry points the flagship examples must not touch
 BANNED = ("record_plan(", "build_global_", "PlanStore.open(",
           "build_train_step(")
-FACADE_ONLY = ("examples/quickstart.py", "examples/serve_batched.py")
+FACADE_ONLY = ("examples/quickstart.py", "examples/serve_batched.py",
+               "src/repro/launch/dryrun.py")
 
 
 def _loc(src: str) -> int:

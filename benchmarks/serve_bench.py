@@ -25,6 +25,16 @@ Rows (name,value,unit):
   serve/{tiered,baseline}_syncs_per_decode   host syncs per decode step
   serve/chunk_steps            chunked-prefill steps in the trace
 
+With ``--cache paged`` every engine runs on the paged KV backend
+(``PagedCache``, page_size=16) and an extra equal-pool-bytes admission
+comparison runs: a dense engine with 4 rows x 128 tokens vs a paged
+engine with the same 512-token pool split into 32 pages across 16 rows.
+Short requests then pack the paged pool far denser.  Extra rows:
+  serve/dense_admitted         peak concurrent rows, dense pool
+  serve/paged_admitted         peak concurrent rows, paged pool
+  serve/paged_admitted_delta   paged - dense (gate: > 0, paged >= 2x)
+  serve/paged_kv_util          peak page utilisation of the paged pool
+
 With ``--inject`` an additional degraded-mode trace runs the tiered
 engine under the chaos harness (allocation denials, a poisoned request,
 a straggler iteration, a memory-pressure window) with priorities and
@@ -120,24 +130,67 @@ def _degraded_rows(engine_fn, cfg, requests, max_new):
     ]
 
 
+def _admission_rows(model, params, strategy, cfg):
+    """Equal-pool-bytes admission comparison: 4 dense rows x 128 tokens
+    vs the same 512-token pool paged into 32 x 16-token pages across 16
+    rows.  Short requests pack the paged pool far denser."""
+    from repro.core.strategies import get_strategy
+    from repro.serve import PagedCache, Request, ServeConfig, ServeEngine
+
+    def short_trace():
+        rng = np.random.default_rng(11)
+        return [Request(rid=i,
+                        prompt=rng.integers(0, cfg.vocab, 8,
+                                            dtype=np.int32),
+                        max_new_tokens=4) for i in range(16)]
+
+    peaks, util = {}, 0.0
+    for name, scfg in (
+        ("dense", ServeConfig(max_batch=4, s_max=128,
+                              prefill_buckets=(16, 32))),
+        ("paged", ServeConfig(max_batch=16, s_max=128,
+                              prefill_buckets=(16, 32),
+                              cache=PagedCache(page_size=16,
+                                               num_pages=32))),
+    ):
+        eng = ServeEngine(model, params, get_strategy(strategy), scfg)
+        for r in short_trace():
+            eng.submit(r)
+        done = eng.run()
+        assert all(r.ok for r in done), f"{name} admission trace failed"
+        peaks[name] = eng.stats["peak_active"]
+        if name == "paged":
+            util = eng.stats["kv"]["kv_util"]
+    return [
+        f"serve/dense_admitted,{peaks['dense']},rows",
+        f"serve/paged_admitted,{peaks['paged']},rows",
+        f"serve/paged_admitted_delta,{peaks['paged'] - peaks['dense']},"
+        "rows",
+        f"serve/paged_kv_util,{util:.3f},ratio",
+    ]
+
+
 def run(requests: int = 12, max_new: int = 6, strategy: str = "sequential",
-        arch: str = "chatglm3-6b", repeats: int = 3, inject: bool = False):
+        arch: str = "chatglm3-6b", repeats: int = 3, inject: bool = False,
+        cache: str = "dense"):
     import jax
     from repro.configs import get_smoke_config
     from repro.core.strategies import get_strategy
     from repro.models.layers import MeshInfo
     from repro.models.registry import build_model
-    from repro.serve import ServeConfig, ServeEngine
+    from repro.serve import PagedCache, ServeConfig, ServeEngine
 
     cfg = get_smoke_config(arch)
     model = build_model(cfg, MeshInfo(tp=1, dp=1))
     segs, _ = model.build_segments("prefill", 1, 32, s_max=128)
     params = model._init_from_segments(segs, jax.random.PRNGKey(0))
+    backend = PagedCache(page_size=16) if cache == "paged" else None
 
     def engine(**kw):
         return ServeEngine(model, params, get_strategy(strategy),
                            ServeConfig(max_batch=8, s_max=128,
-                                       prefill_buckets=(16, 32), **kw))
+                                       prefill_buckets=(16, 32),
+                                       cache=backend, **kw))
 
     tiered = engine()
     base = engine(decode_tiers=(8,), prefill_batch=1, async_host=False)
@@ -181,6 +234,8 @@ def run(requests: int = 12, max_new: int = 6, strategy: str = "sequential",
     ]
     for t, n in sorted(st["tier_steps"].items()):
         out.append(f"serve/tier_steps_{t},{n},count")
+    if cache == "paged":
+        out.extend(_admission_rows(model, params, strategy, cfg))
     if inject:
         out.extend(_degraded_rows(engine, cfg, requests, max_new))
     return out
@@ -194,7 +249,11 @@ if __name__ == "__main__":
     ap.add_argument("--strategy", default="sequential")
     ap.add_argument("--inject", action="store_true",
                     help="add a degraded-mode trace under injected faults")
+    ap.add_argument("--cache", default="dense",
+                    choices=("dense", "paged"),
+                    help="KV cache backend; paged adds the equal-pool "
+                         "admission comparison rows")
     args = ap.parse_args()
     print("\n".join(run(requests=args.requests, max_new=args.max_new,
                         strategy=args.strategy, repeats=args.repeats,
-                        inject=args.inject)))
+                        inject=args.inject, cache=args.cache)))

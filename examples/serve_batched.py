@@ -1,14 +1,16 @@
 """End-to-end serving driver: batched requests through the DynaFlow engine.
 
 The whole integration is one ``repro.api.compile`` call: arch + strategy
-policy + plan-store path in, a Program out whose ``serve()`` owns the
+policy + KV cache backend in, a Program out whose ``serve()`` owns the
 engine, the schedule contexts and the PlanStore lifecycle.  Serves a
-(smoke-sized) chatglm3 with bucketed prefill, continuous-batching decode,
-and the dynamic policy choosing per-bucket plans — the paper's deployment
-story in miniature.  Afterwards the server is "restarted": a second
-Program compiled against the same store path warm-starts and serves its
-first request without re-lowering a single plan (restore hits + shares
-only — the cross-process half of the capture/replay story).
+(smoke-sized) chatglm3 with bucketed prefill, continuous-batching decode
+on the paged KV backend, and the dynamic policy choosing per-bucket
+plans — the paper's deployment story in miniature.  Afterwards the whole
+program is packed into ONE file with ``program.save``: arch + policy
+spec + cache backend + every lowered plan.  The "restarted" server is a
+single ``Program.load`` — it serves its first request without
+re-lowering a single plan (restore hits + shares only — the
+cross-process half of the capture/replay story).
 
 Run:  PYTHONPATH=src python examples/serve_batched.py [--requests 24]
 """
@@ -29,17 +31,18 @@ def main():
     ap.add_argument("--requests", type=int, default=24)
     ap.add_argument("--max-new", type=int, default=12)
     ap.add_argument("--strategy", default="dynamic")
-    ap.add_argument("--plan-store", default=None,
-                    help="persist lowered plans here (default: a temp file)")
+    ap.add_argument("--bundle", default=None,
+                    help="save the program bundle here (default: a temp "
+                         "file)")
     args = ap.parse_args()
 
-    store_path = args.plan_store or os.path.join(
-        tempfile.mkdtemp(prefix="dynaflow-"), "plan_store.dfps")
+    bundle = args.bundle or os.path.join(
+        tempfile.mkdtemp(prefix="dynaflow-"), "program.dfpb")
     serve_cfg = ServeConfig(max_batch=8, s_max=128,
                             prefill_buckets=(16, 32, 64))
 
     program = repro.api.compile(args.arch, policy=args.strategy,
-                                smoke=True, plan_store_path=store_path)
+                                smoke=True, cache="paged")
     params = program.init_params(0)
     eng = program.serve(params, serve_cfg)
     vocab = program.model.cfg.vocab
@@ -64,7 +67,7 @@ def main():
           f"{ {t: n for t, n in st['tier_steps'].items() if n} } "
           f"({st['host_syncs']} host syncs / {st['decode_steps']} decode "
           f"steps, {st['chunk_steps']} chunk steps)")
-    print(f"engine stats: {st}")
+    print(f"kv backend: {st['kv']}")
     ps = program.stats
     print(f"plan store: {ps['exec_misses']} builds, {ps['exec_hits']} "
           f"replays (the CUDA-graph-capture analogue); "
@@ -72,16 +75,17 @@ def main():
           f"(share rate {ps['share_rate']:.0%})")
     assert all(len(r.output) == args.max_new for r in done)
     eng.shutdown()
+    n_plans = program.save(bundle)
     program.close()
 
-    # -- "restart" the server: warm-start from the persisted PlanStore ----
-    # A fresh Program (fresh process in production) compiled against the
-    # same store path restores the canonical lowerings and serves its
-    # first request with zero lower() calls.
-    print(f"\nrestarting from {store_path} "
-          f"({os.path.getsize(store_path)} bytes)...")
-    program2 = repro.api.compile(args.arch, policy=args.strategy,
-                                 smoke=True, plan_store_path=store_path)
+    # -- "restart" the server: one file holds the whole deployment --------
+    # Program.load rebuilds arch + policy + paged cache backend from the
+    # bundle header and restores every lowered plan, so a fresh process
+    # serves its first request with zero lower() calls.
+    print(f"\nrestarting from {bundle} "
+          f"({n_plans} plans, {os.path.getsize(bundle)} bytes)...")
+    program2 = repro.api.Program.load(bundle)
+    print(f"restored backend: {program2.cache_backend}")
     eng2 = program2.serve(params, serve_cfg)
     t0 = time.perf_counter()
     eng2.submit(Request(rid=10_000,

@@ -50,6 +50,32 @@ from .core.policy import StrategyPolicy, as_policy, resolve_strategy
 from .core.scheduler import ScheduleContext, record_plan
 
 
+PROGRAM_MAGIC = "dynaflow-program"
+PROGRAM_FORMAT_VERSION = 1
+
+
+class ProgramBundleError(ValueError):
+    """A ``Program.save`` bundle that cannot be loaded: wrong magic,
+    incompatible format/fingerprint versions, or a saved policy that
+    cannot be reconstructed without the caller's help."""
+
+
+def _arch_from_dict(d: dict):
+    """Rebuild an ``ArchConfig`` from its JSON dict (the inverse of
+    ``dataclasses.asdict`` after a JSON round-trip turned every tuple —
+    including the nested ones inside ``rope_kw`` — into a list)."""
+    from .configs.base import ArchConfig, MoEConfig, SSMConfig
+    from .core.plan_serde import deep_tuple
+    d = dict(d)
+    if d.get("moe"):
+        d["moe"] = MoEConfig(**d["moe"])
+    if d.get("ssm"):
+        d["ssm"] = SSMConfig(**d["ssm"])
+    d = {k: deep_tuple(v) if isinstance(v, list) else v
+         for k, v in d.items()}
+    return ArchConfig(**d)
+
+
 @dataclasses.dataclass
 class CompiledStep:
     """A built step function plus everything needed to feed it.
@@ -73,7 +99,8 @@ class CompiledStep:
 
 def compile(model, policy=None, mesh=None, plan_store=None,
             plan_store_path: Optional[str] = None, example_inputs=None,
-            smoke: bool = False) -> "Program":
+            smoke: bool = False, cache=None,
+            mesh_info=None) -> "Program":
     """Build a :class:`Program` — the single frontend entry point.
 
     ``model``   — an arch name (``"chatglm3-6b"``), an ``ArchConfig``, a
@@ -91,9 +118,24 @@ def compile(model, policy=None, mesh=None, plan_store=None,
     ``example_inputs`` — name -> ShapeDtypeStruct, required when
                   ``model`` is an untraced ``Module``.
     ``smoke``   — with an arch name: the reduced same-family config.
+    ``cache``   — KV cache backend for ``serve()``: a
+                  ``serve.CacheBackend`` (``DenseCache``/``PagedCache``),
+                  the names ``"dense"``/``"paged"``, or ``None`` to leave
+                  the choice to ``ServeConfig``.  The backend identity
+                  salts the serve PlanStore keys and rides along in
+                  ``Program.save`` bundles.
+    ``mesh_info`` — explicit ``MeshInfo`` for model construction when
+                  ``mesh`` is a ``jax.sharding.Mesh`` whose derived
+                  defaults (fsdp, attn impl) are not what you want — the
+                  dryrun launcher's path.
     """
     from .models.layers import MeshInfo
 
+    # remember how the policy was spelled: Program.save can persist a
+    # name or "the default" but not an opaque object (load() then needs
+    # policy= re-supplied and verifies it against the saved salt)
+    policy_spec = ("<default>" if policy is None
+                   else policy if isinstance(policy, str) else None)
     if policy is None:
         from .core.strategies.dynamic import dynamic_policy
         policy = dynamic_policy()
@@ -113,7 +155,8 @@ def compile(model, policy=None, mesh=None, plan_store=None,
         return Program(graph=model, policy=policy, store=store)
 
     jax_mesh = mesh if _is_jax_mesh(mesh) else None
-    mesh_info = mesh if isinstance(mesh, MeshInfo) else None
+    if mesh_info is None:
+        mesh_info = mesh if isinstance(mesh, MeshInfo) else None
     if mesh_info is None:
         if jax_mesh is not None:
             from .launch.mesh import make_mesh_info
@@ -128,7 +171,7 @@ def compile(model, policy=None, mesh=None, plan_store=None,
         from .models.registry import build_model
         model = build_model(model, mesh_info)
     return Program(model=model, policy=policy, store=store,
-                   mesh=jax_mesh)
+                   mesh=jax_mesh, cache=cache, policy_spec=policy_spec)
 
 
 def _is_jax_mesh(mesh) -> bool:
@@ -148,12 +191,17 @@ class Program:
 
     def __init__(self, model=None, graph: Optional[OpGraph] = None,
                  policy: StrategyPolicy = None, store: PlanStore = None,
-                 mesh=None):
+                 mesh=None, cache=None, policy_spec: Optional[str] = None):
         self.model = model
         self.graph = graph
         self.policy = policy
         self.store = store
         self.mesh = mesh
+        if cache is not None:
+            from .serve.kv_cache import resolve_cache_backend
+            cache = resolve_cache_backend(cache)
+        self.cache_backend = cache      # None: ServeConfig decides
+        self.policy_spec = policy_spec  # "<default>" | name | None(opaque)
         self._engines: list = []
         self._graph_cache: dict = {}    # shape bucket -> (graph, realizer)
 
@@ -180,6 +228,137 @@ class Program:
     @property
     def stats(self) -> dict:
         return self.store.snapshot()
+
+    # -- one-file deployment -----------------------------------------------
+    def save(self, path: str) -> int:
+        """Write a one-file deployment bundle: a versioned JSON header
+        (model config, mesh info, policy spec + salt, cache-backend
+        identity) followed by the PlanStore artifact, atomically.  A
+        restarted server is then one :func:`load` call instead of
+        re-threading arch / policy / ``plan_store_path`` by hand.
+        Returns the number of persisted plan entries."""
+        import json
+        import os
+        import tempfile
+
+        from .core.plan import FINGERPRINT_VERSION
+        from .core.plan_serde import FORMAT_VERSION
+        self._require_lm("save")
+        if self.mesh is not None:
+            raise ProgramBundleError(
+                "Program.save is single-host: a jax.sharding.Mesh is "
+                "process-local; load() the bundle and recompile with "
+                "mesh= instead")
+        header = {
+            "magic": PROGRAM_MAGIC,
+            "format_version": PROGRAM_FORMAT_VERSION,
+            "fingerprint_version": FINGERPRINT_VERSION,
+            "plan_format_version": FORMAT_VERSION,
+            "arch": dataclasses.asdict(self.model.cfg),
+            "mesh_info": dataclasses.asdict(self.model.mesh),
+            "policy_spec": self.policy_spec,
+            "policy_salt": strategy_salt(self.policy),
+            "cache_backend": (list(self.cache_backend.identity())
+                              if self.cache_backend is not None else None),
+        }
+        path = os.path.abspath(path)
+        fd, tmp = tempfile.mkstemp(dir=os.path.dirname(path),
+                                   prefix=".program-", suffix=".tmp")
+        store_tmp = tmp + ".store"
+        try:
+            n = self.store.save(store_tmp)
+            with os.fdopen(fd, "w") as f:
+                f.write(json.dumps(header, sort_keys=True) + "\n")
+                with open(store_tmp) as sf:
+                    f.write(sf.read())
+                f.flush()
+                os.fsync(f.fileno())
+            os.replace(tmp, path)
+        except BaseException:
+            if os.path.exists(tmp):
+                os.unlink(tmp)
+            raise
+        finally:
+            if os.path.exists(store_tmp):
+                os.unlink(store_tmp)
+        return n
+
+    @staticmethod
+    def load(path: str, policy=None, cache=None) -> "Program":
+        """Rebuild a :class:`Program` from a :meth:`save` bundle: model
+        from the persisted config, policy from its saved spec, cache
+        backend from its identity, and the PlanStore warm-started from
+        the embedded artifact — every previously-captured plan restores
+        with zero ``lower()`` calls.
+
+        ``policy=`` overrides (and is required when the bundle was saved
+        with an opaque policy object — the bundle records its salt, and
+        a mismatched policy is rejected rather than silently missing
+        every cached plan).  ``cache=`` overrides the saved backend."""
+        import json
+        import os
+        import tempfile
+
+        from .core.plan import FINGERPRINT_VERSION
+        from .core.plan_serde import FORMAT_VERSION, deep_tuple
+        with open(path) as f:
+            head_line = f.readline()
+            payload = f.read()
+        try:
+            header = json.loads(head_line)
+            if not isinstance(header, dict):
+                raise ValueError("header is not an object")
+        except ValueError as e:
+            raise ProgramBundleError(
+                f"{path!r} is not a program bundle: {e}") from None
+        if header.get("magic") != PROGRAM_MAGIC:
+            raise ProgramBundleError(
+                f"{path!r} is not a program bundle "
+                f"(magic {header.get('magic')!r})")
+        for field, want in (("format_version", PROGRAM_FORMAT_VERSION),
+                            ("fingerprint_version", FINGERPRINT_VERSION),
+                            ("plan_format_version", FORMAT_VERSION)):
+            if header.get(field) != want:
+                raise ProgramBundleError(
+                    f"bundle {field} {header.get(field)} != {want}; "
+                    "re-save the bundle with this version")
+        from .models.layers import MeshInfo
+        arch = _arch_from_dict(header["arch"])
+        minfo = MeshInfo(**header["mesh_info"])
+        spec = header.get("policy_spec")
+        explicit_policy = policy is not None
+        if policy is None:
+            if spec == "<default>":
+                policy = None
+            elif isinstance(spec, str):
+                policy = spec
+            else:
+                raise ProgramBundleError(
+                    "bundle was saved with an opaque policy (salt "
+                    f"{header.get('policy_salt')}); pass policy= to "
+                    "Program.load")
+        if cache is None and header.get("cache_backend") is not None:
+            from .serve.kv_cache import backend_from_identity
+            cache = backend_from_identity(
+                deep_tuple(header["cache_backend"]))
+        store = PlanStore()
+        fd, tmp = tempfile.mkstemp(prefix=".program-", suffix=".store")
+        try:
+            with os.fdopen(fd, "w") as f:
+                f.write(payload)
+            store.load(tmp)
+        finally:
+            os.unlink(tmp)
+        program = compile(arch, policy=policy, mesh_info=minfo,
+                          plan_store=store, cache=cache)
+        if not explicit_policy \
+                and strategy_salt(program.policy) != header["policy_salt"]:
+            raise ProgramBundleError(
+                f"reconstructed policy {spec!r} hashes to "
+                f"{strategy_salt(program.policy)} but the bundle was "
+                f"saved under {header['policy_salt']} — the policy "
+                "definition drifted; pass policy= explicitly")
+        return program
 
     # -- context resolution ------------------------------------------------
     def _context(self, phase: str, B_loc: int, S: int,
@@ -339,6 +518,10 @@ class Program:
             cfg = ServeConfig(**overrides)
         elif overrides:
             cfg = dataclasses.replace(cfg, **overrides)
+        # the program's cache backend is the default; an explicit
+        # ServeConfig.cache / cache= override wins
+        if cfg.cache is None and self.cache_backend is not None:
+            cfg = dataclasses.replace(cfg, cache=self.cache_backend)
         engine = ServeEngine(self.model, params, self.policy, cfg,
                              plan_store=self.store)
         self._engines.append(engine)

@@ -20,15 +20,13 @@ import traceback
 
 import jax
 
+from .. import api
 from ..configs import get_config, list_archs
 from ..configs.base import SHAPES
 from ..core.strategies import get_strategy
-from ..models.registry import build_model
 from ..roofline.hlo import analyze as hlo_analyze
 from ..roofline.model import roofline_terms
 from .mesh import make_mesh_info, make_production_mesh, mesh_shape_dict
-from .steps import (_build_global_decode_step, _build_global_prefill_step,
-                    _build_global_train_step)
 
 RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
                            "results", "dryrun")
@@ -55,25 +53,28 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
     fsdp = cfg.fsdp_train if shape.kind == "train" else cfg.fsdp_serve
     minfo = make_mesh_info(mesh, fsdp=fsdp, attn_impl="chunked",
                            fsdp_resident=(shape.kind == "decode"))
-    model = build_model(cfg, minfo)
-    sched = get_strategy(strategy)
+    program = api.compile(cfg, policy=get_strategy(strategy), mesh=mesh,
+                          mesh_info=minfo)
 
     t0 = time.perf_counter()
     if shape.kind == "train":
-        fn, in_sdss, in_shd, donate, _, segs = _build_global_train_step(
-            model, sched, shape, mesh, remat_policy=remat_policy)
+        step = program.train_step(global_batch=shape.global_batch,
+                                  seq_len=shape.seq_len,
+                                  remat_policy=remat_policy)
     elif shape.kind == "prefill":
-        fn, in_sdss, in_shd, donate, segs = _build_global_prefill_step(
-            model, sched, shape, mesh)
+        step = program.prefill(global_batch=shape.global_batch,
+                               seq_len=shape.seq_len)
     else:
-        fn, in_sdss, in_shd, donate, segs = _build_global_decode_step(
-            model, sched, shape, mesh)
+        step = program.decode_tiers(
+            max_batch=shape.global_batch, s_max=shape.seq_len,
+            tiers=(shape.global_batch,))[shape.global_batch]
     t_build = time.perf_counter() - t0
 
-    jitted = jax.jit(fn, in_shardings=in_shd, donate_argnums=donate)
+    jitted = jax.jit(step.fn, in_shardings=step.in_shardings,
+                     donate_argnums=step.donate)
     with mesh:
         t0 = time.perf_counter()
-        lowered = jitted.lower(*in_sdss)
+        lowered = jitted.lower(*step.in_sdss)
         t_lower = time.perf_counter() - t0
         t0 = time.perf_counter()
         compiled = lowered.compile()
@@ -81,6 +82,8 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
 
     mem = compiled.memory_analysis()
     cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):    # older jax: one dict per program
+        cost = cost[0] if cost else {}
     hlo = compiled.as_text()
     scopes = (("flashable_attention", "flashable_decode")
               if attn_sub else ())

@@ -501,6 +501,35 @@ class LMBase:
                 out[key] = (1 if count > 1 else 0, self.CACHE_MODEL_DIMS[base])
         return out
 
+    def decode_cache_page_env(self, num_pages: int, page_size: int) -> dict:
+        """Paged decode-cache pool shapes: ``decode_cache_env`` with the
+        request-batch dim reinterpreted as a physical-page dim and the
+        sequence dim shrunk to one page — ``(P, page, kv, hd)`` per-layer,
+        ``(L, P, page, kv, hd)`` stacked.  The serve layer gathers pages
+        back into the contiguous ``(B, s_max, ...)`` view per step, so
+        the decode graph itself never sees the paging.
+
+        Raises for decode state with no sequence axis to page over (SSM
+        conv/ssm states are constant-size per request): probe whether
+        every cache's ``batch_dim + 1`` axis scales with ``s_max``."""
+        a = self.decode_cache_env(1, page_size)
+        b = self.decode_cache_env(1, 2 * page_size)
+        layout = self.decode_cache_layout()
+        for key, sa in a.items():
+            bd = layout[key][0]
+            want = list(sa.shape)
+            want[bd + 1] *= 2
+            if sa.shape[bd + 1] != page_size \
+                    or tuple(want) != b[key].shape:
+                from ..serve.kv_cache import UnpageableCache
+                raise UnpageableCache(
+                    f"decode cache {key!r} has no s_max-proportional "
+                    f"sequence axis at dim {bd + 1} "
+                    f"(shape {sa.shape} at s_max={page_size} vs "
+                    f"{b[key].shape} at s_max={2 * page_size}); "
+                    "serve this model with DenseCache")
+        return self.decode_cache_env(num_pages, page_size)
+
     # params -------------------------------------------------------------------
     def init_params(self, key, phase="train", global_=False) -> dict:
         segs, _ = self.build_segments(phase, 2, 2 * self.mesh.tp

@@ -11,6 +11,7 @@ from .admission import (
     Failed,
     Finished,
     Overloaded,
+    PagePressure,
     PriorityFloor,
     PromptOverflow,
     RejectedRequest,
@@ -20,4 +21,13 @@ from .admission import (
 )
 from .engine import Request, ServeConfig, ServeEngine
 from .faults import FaultInjector, InjectedFault, PoisonedRequest
-from .kv_cache import CacheRowError, KVCacheManager
+from .kv_cache import (
+    CacheBackend,
+    CacheRowError,
+    DenseCache,
+    KVCacheManager,
+    PagedCache,
+    PagedKVCacheManager,
+    UnpageableCache,
+    resolve_cache_backend,
+)

@@ -146,10 +146,22 @@ class AdmissionContext:
     waited_s: float             # time spent in the queue so far
     deadline_left_s: Optional[float]   # None: no deadline
     ttft_left_s: Optional[float]       # None: no TTFT budget
+    # KV-capacity signals from the cache backend (serve/kv_cache.py):
+    # token-granular under PagedCache, row-granular under DenseCache.
+    # Defaulted so pre-paging call sites keep constructing by keyword.
+    free_tokens: int = -1              # -1: backend reported nothing
+    capacity_tokens: int = -1
 
     @property
     def occupancy(self) -> int:
         return self.active + self.chunking
+
+    @property
+    def kv_util(self) -> float:
+        """Fraction of KV token capacity in use (0.0 when unreported)."""
+        if self.capacity_tokens <= 0 or self.free_tokens < 0:
+            return 0.0
+        return 1.0 - self.free_tokens / self.capacity_tokens
 
 
 @dataclasses.dataclass(frozen=True)
@@ -258,6 +270,33 @@ class PriorityFloor(AdmissionPolicy):
 
     def identity(self):
         return ("priority_floor", self.min_priority, self.when_queue_over)
+
+
+@dataclasses.dataclass(frozen=True)
+class PagePressure(AdmissionPolicy):
+    """Shed when admitting the request would push KV token residency
+    past ``max_util`` of pool capacity — the page-granular analogue of
+    :class:`BoundedQueue`, fed by the cache backend's ``free_tokens`` /
+    ``capacity_tokens`` signals.  Declines when the backend reports no
+    capacity (dense engines constructed before the paged era, or unit
+    tests with a partial context)."""
+
+    max_util: float = 0.95
+    name = "page_pressure"
+
+    def __call__(self, ctx):
+        if ctx.capacity_tokens <= 0 or ctx.free_tokens < 0:
+            return None
+        used = ctx.capacity_tokens - ctx.free_tokens
+        if (used + ctx.prompt_len) / ctx.capacity_tokens > self.max_util:
+            return Shed(Overloaded(
+                f"KV pool at {ctx.kv_util:.0%} utilization; admitting a "
+                f"{ctx.prompt_len}-token prompt would exceed the "
+                f"{self.max_util:.0%} page-pressure ceiling"))
+        return None
+
+    def identity(self):
+        return ("page_pressure", self.max_util)
 
 
 class _AdmissionChain(AdmissionPolicy):

@@ -115,7 +115,7 @@ from .admission import (
     admission_chain,
 )
 from .faults import PoisonedRequest
-from .kv_cache import KVCacheManager
+from .kv_cache import cache_backend_salt, resolve_cache_backend
 
 
 def pow2_tiers(n: int) -> tuple:
@@ -192,6 +192,14 @@ class ServeConfig:
     # shrinks effective capacity.  With uniform priorities and no
     # pressure this never triggers.
     preemption: bool = True
+    # KV storage backend (serve/kv_cache.py): a CacheBackend instance,
+    # the names "dense"/"paged", or None for DenseCache (today's dense
+    # per-slot pool).  PagedCache allocates fixed-size pages on demand
+    # from a shared pool, so KV memory scales with tokens resident and
+    # admission is page-capacity, not row-count.  The backend identity
+    # salts every PlanStore key, so dense and paged captures coexist in
+    # one store and restore independently.
+    cache: object = None
     # Chaos harness: a deterministic serve.faults.FaultInjector threaded
     # through allocation, dispatch, harvest, pacing, and capacity.
     faults: object = None
@@ -234,7 +242,8 @@ class ServeEngine:
                 f"decode_tiers must ascend to max_batch: {self.tiers}")
         self.prefill_tiers = pow2_tiers(
             max(1, min(cfg.prefill_batch, cfg.max_batch)))
-        self.cache = KVCacheManager(model, cfg.max_batch, cfg.s_max)
+        self.backend = resolve_cache_backend(cfg.cache)
+        self.cache = self.backend.build(model, cfg)
         budgets = dict(plan_capacity=cfg.plan_capacity,
                        plan_budget_bytes=cfg.plan_budget_bytes,
                        exec_capacity=cfg.exec_capacity,
@@ -260,7 +269,14 @@ class ServeEngine:
             self.store = PlanStore.open(cfg.plan_store_path, **budgets)
         else:
             self.store = PlanStore(**budgets)
-        self._op_config = model.op_closure_config()
+        # the cache backend changes what the jitted steps close over
+        # (pool layout, gather/scatter paths), so its identity salts the
+        # plan-level outer key — dense and paged captures coexist in one
+        # persisted store and restore independently — and a short digest
+        # of it tags the exec-level step-cache keys below
+        self._op_config = model.op_closure_config() + (
+            ("cache_backend", self.backend.identity()),)
+        self._cache_tag = cache_backend_salt(self.backend)
         # the built-in deadline gate always runs first: a request whose
         # deadline/TTFT budget expired in the queue sheds even under the
         # default admit-everything policy
@@ -293,7 +309,8 @@ class ServeEngine:
                        "submitted": 0, "admitted": 0, "finished": 0,
                        "shed": 0, "failed": 0, "preempted": 0,
                        "resumed": 0, "deadline_missed": 0,
-                       "alloc_denied": 0, "stranded": 0, "drains": 0,
+                       "alloc_denied": 0, "page_denied": 0,
+                       "peak_active": 0, "stranded": 0, "drains": 0,
                        "tier_steps": {t: 0 for t in self.tiers},
                        "tier_builds": {}}
         self._ck = self._cache_keys()
@@ -318,6 +335,12 @@ class ServeEngine:
             raise PromptOverflow(
                 f"prompt length {n} cannot fit s_max={self.cfg.s_max} "
                 "(need at least one decode slot)")
+        if self.cache.paged and (self.cache.pages_needed(n + 1)
+                                 > self.cache.num_pages):
+            raise PromptOverflow(
+                f"prompt length {n} needs "
+                f"{self.cache.pages_needed(n + 1)} KV pages but the pool "
+                f"holds only {self.cache.num_pages} in total")
         if n > self.cfg.prefill_buckets[-1]:
             if not self.cfg.chunked_prefill:
                 raise ChunkingDisabled(
@@ -441,6 +464,7 @@ class ServeEngine:
         out = dict(self._stats)
         out["tier_steps"] = dict(self._stats["tier_steps"])
         out["plan_store"] = self.store.snapshot()
+        out["kv"] = self.cache.kv_stats()
         if self.faults is not None:
             out["faults"] = self.faults.counts
         return out
@@ -468,7 +492,9 @@ class ServeEngine:
             max_batch=self.cfg.max_batch,
             prompt_len=len(req.effective_prompt), priority=req.priority,
             waited_s=waited, deadline_left_s=deadline_left,
-            ttft_left_s=ttft_left)
+            ttft_left_s=ttft_left,
+            free_tokens=self.cache.free_tokens(),
+            capacity_tokens=self.cache.token_capacity())
         return (chain or self.admission)(ctx)
 
     def _release_row_of(self, req: Request):
@@ -593,7 +619,19 @@ class ServeEngine:
         if self.faults is not None and self.faults.deny_alloc():
             self._stats["alloc_denied"] += 1
             return None
-        return self.cache.allocate(req.rid)
+        row = self.cache.allocate(req.rid)
+        if row is None:
+            return None
+        # paged backends reserve the whole (effective) prompt's pages up
+        # front — chunked prefill then never exhausts mid-prompt, and a
+        # shortfall is an admission signal (the request keeps waiting for
+        # decodes to finish and free pages), not an exception.  The +1
+        # covers the first decode write at position len(prompt).
+        if not self.cache.reserve(row, len(req.effective_prompt) + 1):
+            self.cache.release(row)
+            self._stats["page_denied"] += 1
+            return None
+        return row
 
     def _shed_expired(self, now: float):
         """Re-check *deadlines* over the queue: a request that was
@@ -734,10 +772,12 @@ class ServeEngine:
                     self.faults.check_dispatch(
                         "prefill", [r.rid for r in group])
                 fn = self._prefill_fn(bp, bucket)
-                tok, self.cache.caches, self._last_ids = fn(
-                    self.params, jnp.asarray(ids), jnp.asarray(rows),
-                    jnp.asarray(full), jnp.asarray(sent_last),
-                    self.cache.caches, self._last_ids)
+                args = [self.params, jnp.asarray(ids), jnp.asarray(rows),
+                        jnp.asarray(full), jnp.asarray(sent_last),
+                        self.cache.caches, self._last_ids]
+                if self.cache.paged:
+                    args.append(self.cache.page_table_array())
+                tok, self.cache.caches, self._last_ids = fn(*args)
             except PoisonedRequest as e:
                 bad = next(r for r in group if r.rid == e.rid)
                 self._fail_request(bad, e)
@@ -786,7 +826,41 @@ class ServeEngine:
                                 else None,
                                 op_config=self._op_config)
             ck = self._ck
-            bds = self.cache.batch_dims
+            cache = self.cache
+            bds = cache.batch_dims
+
+            if cache.paged:
+                nb = bucket // cache.page_size
+
+                def run(params, ids, rows, full, sent_last, caches,
+                        last_ids, page_tab):
+                    pos = jnp.broadcast_to(
+                        jnp.arange(bucket, dtype=jnp.int32), (bp, bucket))
+                    out = fwd(params, {"ids": ids, "positions": pos})
+                    tok = jnp.argmax(out["logits"][:, -1, :],
+                                     axis=-1).astype(jnp.int32)
+                    caches = dict(caches)
+                    li = last_ids[:, 0]
+                    # reversed: padded slots alias rows[0]'s page-table
+                    # row, so slot 0's real write lands last and wins;
+                    # bucket tail beyond a row's reserved pages scatters
+                    # into the trash page
+                    for j in reversed(range(bp)):
+                        r = rows[j]
+                        pt_row = jnp.take(page_tab, r, axis=0)
+                        for pk, pv, dk, dv in ck:
+                            for src, dst in ((pk, dk), (pv, dv)):
+                                axis = 1 if bds[dst] else 0
+                                slab = lax.slice_in_dim(out[src], j, j + 1,
+                                                        axis=axis)
+                                caches.update(cache.scatter_row_pages(
+                                    {dst: caches[dst]}, {dst: slab},
+                                    pt_row, 0, nb, 0, bucket))
+                        li = li.at[r].set(
+                            jnp.where(full[j], tok[j], sent_last[j]))
+                    return tok, caches, li[:, None]
+
+                return _jit(run, donate=(5, 6))
 
             def run(params, ids, rows, full, sent_last, caches, last_ids):
                 pos = jnp.broadcast_to(jnp.arange(bucket, dtype=jnp.int32),
@@ -820,7 +894,8 @@ class ServeEngine:
 
             return _jit(run, donate=(5, 6))
 
-        return self.store.get_or_build(("prefill", bp, bucket), build)
+        return self.store.get_or_build(
+            ("prefill", self._cache_tag, bp, bucket), build)
 
     # -- chunked prefill --------------------------------------------------
     def _chunk_plan(self, n: int) -> list:
@@ -890,10 +965,12 @@ class ServeEngine:
             if self.faults is not None:
                 self.faults.check_dispatch("chunk", [req.rid])
             fn = self._chunk_fn(c)
-            self.cache.caches = fn(
-                self.params, jnp.asarray(st["padded"][off:off + c])[None],
-                jnp.asarray(off, jnp.int32), jnp.asarray(row, jnp.int32),
-                self.cache.caches)
+            args = [self.params, jnp.asarray(st["padded"][off:off + c])[None],
+                    jnp.asarray(off, jnp.int32), jnp.asarray(row, jnp.int32),
+                    self.cache.caches]
+            if self.cache.paged:
+                args.append(self.cache.page_table_array())
+            self.cache.caches = fn(*args)
         except Exception as e:                      # noqa: BLE001
             self._fail_request(req, f"chunk dispatch failed: {e}")
             return
@@ -927,7 +1004,26 @@ class ServeEngine:
                                 plan_cache=self.store if self.cfg.lowered
                                 else None,
                                 op_config=self._op_config)
-            bds = self.cache.batch_dims
+            cache = self.cache
+            bds = cache.batch_dims
+
+            if cache.paged:
+                nbc = chunk // cache.page_size
+
+                def run(params, ids, off, row, caches, page_tab):
+                    pos = (off + jnp.arange(chunk, dtype=jnp.int32))[None]
+                    pt_row = jnp.take(page_tab, row, axis=0)
+                    rcaches = cache.gather_row(caches, pt_row)
+                    out = fwd(params, {"ids": ids, "positions": pos,
+                                       "cache_len": off[None], **rcaches})
+                    # chunk offsets are bucket sums and buckets are page
+                    # multiples (validated at backend build), so the
+                    # chunk's slab is exactly nbc whole blocks
+                    return cache.scatter_row_pages(
+                        caches, out, pt_row, off // cache.page_size, nbc,
+                        off, chunk)
+
+                return _jit(run, donate=(4,))
 
             def run(params, ids, off, row, caches):
                 pos = (off + jnp.arange(chunk, dtype=jnp.int32))[None]
@@ -943,7 +1039,8 @@ class ServeEngine:
 
             return _jit(run, donate=(4,))
 
-        return self.store.get_or_build(("chunk", chunk), build)
+        return self.store.get_or_build(
+            ("chunk", self._cache_tag, chunk), build)
 
     # -- decode -----------------------------------------------------------
     def _decode_fn(self, tier: int) -> Callable:
@@ -962,7 +1059,36 @@ class ServeEngine:
             self._stats["tier_builds"][tier] = {
                 k: st[k] - before[k]
                 for k in ("misses", "shares", "restore_hits")}
-            bds = self.cache.batch_dims
+            cache = self.cache
+            bds = cache.batch_dims
+
+            if cache.paged:
+
+                def run(params, last_ids, cache_len, active, eos,
+                        will_end, caches, page_tab):
+                    ids = lax.slice_in_dim(last_ids, 0, tier, axis=0)
+                    clen = lax.slice_in_dim(cache_len, 0, tier, axis=0)
+                    # gather the tier's pages into the contiguous
+                    # (tier, s_max, ...) view — the model forward (and
+                    # its captured plan) is identical to the dense path
+                    tcaches = cache.gather_rows(caches, page_tab, tier)
+                    out = fwd(params, {"ids": ids,
+                                       "positions": clen[:, None],
+                                       "cache_len": clen, **tcaches})
+                    # only the frontier block per row was written;
+                    # unmapped frontiers (mid-chunk rows, freed rows in
+                    # the tier prefix) scatter into the trash page
+                    new_caches = cache.scatter_frontier(
+                        caches, out, page_tab, cache_len, tier)
+                    tok_t = jnp.argmax(out["logits"][:, -1, :],
+                                       axis=-1).astype(jnp.int32)
+                    tok = lax.dynamic_update_slice(last_ids[:, 0], tok_t,
+                                                   (0,))
+                    tok = jnp.where(active, tok, last_ids[:, 0])
+                    done = active & (will_end | (tok == eos))
+                    return tok, done, tok[:, None], new_caches
+
+                return _jit(run, donate=(1, 6))
 
             def run(params, last_ids, cache_len, active, eos, will_end,
                     caches):
@@ -986,7 +1112,8 @@ class ServeEngine:
 
             return _jit(run, donate=(1, 6))
 
-        return self.store.get_or_build(("decode", tier), build)
+        return self.store.get_or_build(
+            ("decode", self._cache_tag, tier), build)
 
     def _compact(self, tier: int):
         """Restore the prefix invariant: every allocated row < tier —
@@ -1010,6 +1137,35 @@ class ServeEngine:
                 chunk_rows[src]["req"].row = dst
             self._stats["row_moves"] += 1
 
+    def _ensure_decode_pages(self):
+        """Paged backends only: every active row writes position
+        ``lengths[row]`` this step, which needs a fresh page whenever the
+        length crosses a page boundary (including the boundary cases a
+        prefill or final chunk leaves the length exactly page-aligned).
+        On pool exhaustion, preempt the lowest-priority decoding row
+        (its release frees pages — the victim may itself be one of the
+        short rows) and retry; rows that still cannot get a page
+        terminate as ``Failed`` so the survivors keep decoding."""
+        if not self.cache.paged:
+            return
+        while True:
+            short = [row for row in sorted(self.active)
+                     if not self.cache.reserve(
+                         row, int(self.cache.lengths[row]) + 1)]
+            if not short:
+                return
+            self._stats["page_denied"] += len(short)
+            if self.cfg.preemption and self._preempt_one():
+                continue
+            for row in short:
+                req = self.active.get(row)
+                if req is not None:
+                    self._fail_request(req, (
+                        "KV page pool exhausted: no page free for the "
+                        f"decode write at position {self.cache.lengths[row]}"
+                        " and no preemptible victim"))
+            return
+
     def _dispatch_decode(self):
         """Dispatch one decode step at the smallest covering tier.
         Returns an opaque handle ``(tok_dev, done_dev, snapshot)`` the
@@ -1020,12 +1176,17 @@ class ServeEngine:
         exception fails the rows in this dispatch (blast radius is the
         batch, never the engine)."""
         while self.active:
+            self._ensure_decode_pages()
+            if not self.active:
+                return None
             B = self.cfg.max_batch
+            occ = len(self.active) + len(self._chunking)
+            self._stats["peak_active"] = max(self._stats["peak_active"],
+                                             occ)
             # the tier must cover every allocated row: chunking rows ride
             # in the prefix (their frontier-position garbage writes are
             # overwritten by the next chunk — see _step_chunked)
-            tier = self._tier_for(len(self.active) + len(self._chunking),
-                                  self.tiers)
+            tier = self._tier_for(occ, self.tiers)
             self._compact(tier)
             active = np.zeros((B,), bool)
             will_end = np.zeros((B,), bool)
@@ -1043,11 +1204,13 @@ class ServeEngine:
                     self.faults.check_dispatch(
                         "decode", [r.rid for _, r in snapshot])
                 fn = self._decode_fn(tier)
-                tok, done, self._last_ids, self.cache.caches = fn(
-                    self.params, self._last_ids,
-                    self.cache.cache_len_array(),
-                    jnp.asarray(active), jnp.asarray(eos),
-                    jnp.asarray(will_end), self.cache.caches)
+                args = [self.params, self._last_ids,
+                        self.cache.cache_len_array(),
+                        jnp.asarray(active), jnp.asarray(eos),
+                        jnp.asarray(will_end), self.cache.caches]
+                if self.cache.paged:
+                    args.append(self.cache.page_table_array())
+                tok, done, self._last_ids, self.cache.caches = fn(*args)
             except PoisonedRequest as e:
                 bad = next(r for _, r in snapshot if r.rid == e.rid)
                 self._fail_request(bad, e)

@@ -1,21 +1,44 @@
-"""KV-cache slot manager for the tiered batched serving engine.
+"""KV-cache storage backends for the tiered batched serving engine.
 
-A fixed pool of ``max_batch`` rows per cache tensor (the model's
-``decode_cache_env`` layout).  Requests are assigned rows on admission and
-release them on completion — continuous batching over static-shape decode
-steps.  The tiered engine keeps the **prefix invariant**: active rows are
+The memory-layout decision is a **pluggable policy**, mirroring
+``core.policy.StrategyPolicy``: a :class:`CacheBackend` is a frozen
+dataclass with a stable ``identity()`` whose ``build()`` constructs the
+engine's cache manager.  Two backends ship:
+
+  * :class:`DenseCache` (default) — a fixed pool of ``max_batch`` rows
+    per cache tensor (the model's ``decode_cache_env`` layout); every
+    admitted request reserves a full ``s_max`` row whether used or not.
+  * :class:`PagedCache` — a shared pool of fixed-size pages per cache
+    tensor plus a per-request page table (the vLLM idea, expressed
+    through the engine's tier/specialize machinery so paged decode
+    graphs are just more shape buckets).  KV memory scales with tokens
+    actually resident; admission is page-capacity, not row-count, and
+    tier-shrink compaction is a host-side page-table handoff instead of
+    device row copies.
+
+Both managers keep the engine's **prefix invariant**: active rows are
 compacted into the lowest-numbered slots so a decode step at batch tier
-``t`` only touches rows ``[0, t)`` of the pool (sliced and written back
-*inside* the jitted step; the manager itself never copies cache data
-host-side).
+``t`` only touches rows ``[0, t)``.  ``lengths`` is the host-side mirror
+of per-row cache occupancy, advanced deterministically at dispatch time.
 
-``lengths`` is the host-side mirror of per-row cache occupancy.  The
-engine advances it deterministically at dispatch time (prefill sets it,
-every decode step increments the active rows), so the device never has to
-be synced to know where a row's history ends.
+The backend's ``identity()`` salts every PlanStore key the engine forms
+(plan-level via the op-closure config, exec-level via the step-cache
+keys), so dense and paged captures coexist in one store and restore
+independently across processes.
+
+Paged layout.  Physical page 0 is reserved as a **trash page**: page-
+table entries of unallocated block slots point at it, so the static-
+shape jitted steps may write through them unconditionally (bucket
+padding beyond a short prompt, the frontier-position garbage token of a
+row mid-chunked-prefill) without corrupting a later owner.  Real pages
+are ``1..num_pages``.
 """
 from __future__ import annotations
 
+import bisect
+import dataclasses
+import hashlib
+import heapq
 from typing import Optional
 
 import jax.numpy as jnp
@@ -31,8 +54,132 @@ class CacheRowError(RuntimeError):
     request's cache, far from the cause."""
 
 
+class UnpageableCache(ValueError):
+    """The model's decode state has no sequence axis to page over (SSM
+    conv/state tensors); serve it with :class:`DenseCache`."""
+
+
+# -- backend protocol --------------------------------------------------------
+
+
+class CacheBackend:
+    """Protocol base, mirroring ``core.policy.StrategyPolicy``: frozen
+    dataclasses with a stable ``identity()`` (a tuple of primitives,
+    reproducible across processes — it salts PlanStore keys) and a
+    ``build(model, cfg)`` constructing the engine's cache manager."""
+
+    name = "cache"
+
+    def identity(self) -> tuple:
+        raise NotImplementedError
+
+    def build(self, model, cfg):
+        raise NotImplementedError
+
+
+@dataclasses.dataclass(frozen=True)
+class DenseCache(CacheBackend):
+    """Today's behavior (the default): one ``s_max`` row per admitted
+    request, reserved up front."""
+
+    name = "dense"
+
+    def identity(self) -> tuple:
+        return ("dense",)
+
+    def build(self, model, cfg) -> "KVCacheManager":
+        return KVCacheManager(model, cfg.max_batch, cfg.s_max,
+                              backend=self)
+
+
+@dataclasses.dataclass(frozen=True)
+class PagedCache(CacheBackend):
+    """Paged KV: a shared pool of ``num_pages`` pages of ``page_size``
+    tokens per cache tensor, allocated to requests on demand.
+
+    ``num_pages=None`` sizes the pool to the dense equivalent
+    (``max_batch * s_max / page_size`` pages — same bytes, but memory
+    now scales with tokens resident, so the same pool admits more
+    concurrent requests whenever actual lengths run short of ``s_max``).
+    ``page_size`` must divide ``s_max`` and every prefill bucket (chunk
+    offsets are bucket sums, so page-aligned writes come for free)."""
+
+    page_size: int = 16
+    num_pages: Optional[int] = None
+    name = "paged"
+
+    def identity(self) -> tuple:
+        return ("paged", self.page_size, self.num_pages)
+
+    def build(self, model, cfg) -> "PagedKVCacheManager":
+        if self.page_size < 1:
+            raise ValueError(f"page_size must be >= 1: {self.page_size}")
+        if cfg.s_max % self.page_size:
+            raise ValueError(
+                f"page_size {self.page_size} must divide s_max "
+                f"{cfg.s_max}")
+        bad = [b for b in cfg.prefill_buckets if b % self.page_size]
+        if bad:
+            raise ValueError(
+                f"page_size {self.page_size} must divide every prefill "
+                f"bucket (chunk offsets are bucket sums and cache writes "
+                f"are page-granular); offending buckets: {bad}")
+        return PagedKVCacheManager(model, cfg.max_batch, cfg.s_max,
+                                   backend=self)
+
+
+def resolve_cache_backend(cache) -> CacheBackend:
+    """Normalize ``ServeConfig.cache``: ``None`` -> :class:`DenseCache`,
+    the strings ``"dense"``/``"paged"`` -> default instances, a backend
+    instance passes through."""
+    if cache is None:
+        return DenseCache()
+    if isinstance(cache, str):
+        if cache == "dense":
+            return DenseCache()
+        if cache == "paged":
+            return PagedCache()
+        raise ValueError(f"unknown cache backend {cache!r} "
+                         "(expected 'dense', 'paged', or a CacheBackend)")
+    if isinstance(cache, CacheBackend):
+        return cache
+    raise TypeError(f"cache must be a CacheBackend, a name, or None; "
+                    f"got {type(cache).__name__}")
+
+
+def backend_from_identity(ident) -> CacheBackend:
+    """Rebuild a backend from its stable ``identity()`` tuple — the
+    inverse the ``Program.save``/``load`` bundle needs (identities are
+    primitives, so they JSON-roundtrip)."""
+    ident = tuple(ident)
+    if ident[:1] == ("dense",):
+        return DenseCache()
+    if ident[:1] == ("paged",) and len(ident) == 3:
+        return PagedCache(
+            page_size=int(ident[1]),
+            num_pages=None if ident[2] is None else int(ident[2]))
+    raise ValueError(f"unknown cache backend identity {ident!r}")
+
+
+def cache_backend_salt(backend: CacheBackend) -> str:
+    """Backend identity as a short printable salt (the
+    ``core.plan.strategy_salt`` idiom) for exec-level step-cache keys."""
+    digest = hashlib.sha256(
+        repr(backend.identity()).encode()).hexdigest()[:12]
+    return f"{backend.name}:{digest}"
+
+
+# -- dense -------------------------------------------------------------------
+
+
 class KVCacheManager:
-    def __init__(self, model, max_batch: int, s_max: int):
+    """Dense per-slot pool: requests own whole rows."""
+
+    paged = False
+
+    def __init__(self, model, max_batch: int, s_max: int,
+                 backend: Optional[CacheBackend] = None):
+        self.backend = backend or DenseCache()
         self.max_batch = max_batch
         self.s_max = s_max
         self.caches = {k: jnp.zeros(v.shape, v.dtype)
@@ -63,14 +210,24 @@ class KVCacheManager:
                 f"{sorted(self.row_owner)})")
         self.row_owner.pop(row)
         self.lengths[row] = 0
-        self.free_rows.append(row)
-        self.free_rows.sort()
+        # sorted insertion: releases are per-request-completion hot path,
+        # so O(log n) search + memmove, not an O(n log n) sort
+        bisect.insort(self.free_rows, row)
 
     def move_row(self, src: int, dst: int):
         """Relocate a request's cache rows ``src -> dst`` (tier-shrink
         compaction).  Device-side: one slice + one dynamic_update_slice
         per cache tensor, dispatched asynchronously — the copies order
         behind any in-flight step through data dependencies."""
+        self._check_move(src, dst)
+        for k, c in self.caches.items():
+            bd = self.batch_dims[k]
+            row = lax.slice_in_dim(c, src, src + 1, axis=bd)
+            self.caches[k] = lax.dynamic_update_slice_in_dim(
+                c, row, dst, axis=bd)
+        self._move_bookkeeping(src, dst)
+
+    def _check_move(self, src: int, dst: int):
         if src == dst:
             raise CacheRowError(f"move_row src == dst == {src}")
         if src not in self.row_owner:
@@ -80,21 +237,39 @@ class KVCacheManager:
         if dst not in self.free_rows:
             raise CacheRowError(f"move_row dst {dst} is not free "
                                 f"(free: {self.free_rows})")
-        for k, c in self.caches.items():
-            bd = self.batch_dims[k]
-            row = lax.slice_in_dim(c, src, src + 1, axis=bd)
-            self.caches[k] = lax.dynamic_update_slice_in_dim(
-                c, row, dst, axis=bd)
+
+    def _move_bookkeeping(self, src: int, dst: int):
         self.lengths[dst] = self.lengths[src]
         self.lengths[src] = 0
         self.row_owner[dst] = self.row_owner.pop(src)
         self.free_rows.remove(dst)
-        self.free_rows.append(src)
-        self.free_rows.sort()
+        bisect.insort(self.free_rows, src)
 
     @property
     def active_rows(self) -> list:
         return sorted(self.row_owner)
+
+    # -- capacity (backend-generic admission signals) ---------------------
+    def reserve(self, row: int, new_len: int) -> bool:
+        """Ensure the row can hold ``new_len`` tokens.  Dense rows own
+        a full ``s_max`` slice up front, so this never fails."""
+        return True
+
+    def token_capacity(self) -> int:
+        return self.max_batch * self.s_max
+
+    def free_tokens(self) -> int:
+        """Token capacity still allocatable (admission pressure signal)."""
+        return len(self.free_rows) * self.s_max
+
+    def resident_tokens(self) -> int:
+        return int(self.lengths.sum())
+
+    def kv_stats(self) -> dict:
+        return {"backend": self.backend.name,
+                "capacity_tokens": self.token_capacity(),
+                "free_tokens": self.free_tokens(),
+                "resident_tokens": self.resident_tokens()}
 
     # -- data -------------------------------------------------------------
     def cache_len_array(self) -> jnp.ndarray:
@@ -102,3 +277,219 @@ class KVCacheManager:
         # numpy buffer, and the async engine mutates ``lengths`` while
         # the dispatched step is still consuming it
         return jnp.asarray(self.lengths.copy())
+
+
+# -- paged -------------------------------------------------------------------
+
+
+class PagedKVCacheManager(KVCacheManager):
+    """Paged pool: requests own page-table rows mapping logical blocks
+    to physical pages, allocated on demand as the sequence grows.
+
+    Pool tensors replace the dense batch dim with a physical-page dim
+    and shrink the sequence dim to one page (``(P, page, kv, hd)``
+    per-layer, ``(L, P, page, kv, hd)`` stacked — from the model's
+    ``decode_cache_page_env``).  The jitted steps gather a tier's pages
+    into the contiguous ``(t, s_max, ...)`` view the model forward
+    expects, so the forward graph — and therefore the PlanStore
+    lowering story — is unchanged, and scatter back only the pages a
+    step wrote (the frontier block per decode row, a chunk's blocks per
+    chunk step)."""
+
+    paged = True
+
+    def __init__(self, model, max_batch: int, s_max: int,
+                 backend: PagedCache):
+        self.backend = backend
+        self.max_batch = max_batch
+        self.s_max = s_max
+        self.page_size = backend.page_size
+        self.blocks_per_row = s_max // self.page_size
+        self.num_pages = (backend.num_pages
+                          if backend.num_pages is not None
+                          else max_batch * self.blocks_per_row)
+        if self.num_pages < 1:
+            raise ValueError(f"num_pages must be >= 1: {self.num_pages}")
+        # +1: physical page 0 is the trash page (never allocated)
+        env = model.decode_cache_page_env(self.num_pages + 1,
+                                          self.page_size)
+        self.caches = {k: jnp.zeros(v.shape, v.dtype)
+                       for k, v in env.items()}
+        layout = model.decode_cache_layout()
+        self.batch_dims = {k: layout[k][0] for k in self.caches}
+        self.lengths = np.zeros((max_batch,), np.int32)
+        self.free_rows = list(range(max_batch))
+        self.row_owner: dict[int, int] = {}
+        # logical block -> physical page; 0 = trash (unmapped)
+        self.page_table = np.zeros((max_batch, self.blocks_per_row),
+                                   np.int32)
+        self.blocks_used = np.zeros((max_batch,), np.int32)
+        self.free_pages = list(range(1, self.num_pages + 1))
+        heapq.heapify(self.free_pages)
+        self.peak_pages_used = 0
+
+    # -- pages ------------------------------------------------------------
+    def pages_needed(self, n_tokens: int) -> int:
+        return -(-max(0, n_tokens) // self.page_size)
+
+    def pages_used(self) -> int:
+        return self.num_pages - len(self.free_pages)
+
+    def reserve(self, row: int, new_len: int) -> bool:
+        """Ensure the row's page table covers ``new_len`` tokens,
+        allocating pages from the shared pool on demand.  Returns False
+        when the pool is exhausted — an admission/preemption signal,
+        never an exception."""
+        if row not in self.row_owner:
+            raise CacheRowError(
+                f"reserve on row {row} which is not allocated")
+        if new_len > self.s_max:
+            return False
+        need = self.pages_needed(new_len)
+        cur = int(self.blocks_used[row])
+        if need <= cur:
+            return True
+        if need - cur > len(self.free_pages):
+            return False
+        for blk in range(cur, need):
+            self.page_table[row, blk] = heapq.heappop(self.free_pages)
+        self.blocks_used[row] = need
+        self.peak_pages_used = max(self.peak_pages_used, self.pages_used())
+        return True
+
+    def release(self, row: int):
+        if row not in self.row_owner:
+            raise CacheRowError(
+                f"release of row {row} which is not allocated "
+                f"(double release or unknown row; active rows: "
+                f"{sorted(self.row_owner)})")
+        self.row_owner.pop(row)
+        self.lengths[row] = 0
+        for blk in range(int(self.blocks_used[row])):
+            heapq.heappush(self.free_pages, int(self.page_table[row, blk]))
+        self.page_table[row, :] = 0
+        self.blocks_used[row] = 0
+        bisect.insort(self.free_rows, row)
+
+    def move_row(self, src: int, dst: int):
+        """Tier-shrink compaction by **page-table handoff**: the
+        physical pages stay put; only the host-side row bookkeeping
+        moves.  Zero device copies (the dense manager pays one
+        slice + dynamic_update_slice per cache tensor here)."""
+        self._check_move(src, dst)
+        self.page_table[dst, :] = self.page_table[src, :]
+        self.page_table[src, :] = 0
+        self.blocks_used[dst] = self.blocks_used[src]
+        self.blocks_used[src] = 0
+        self._move_bookkeeping(src, dst)
+
+    # -- capacity ---------------------------------------------------------
+    def token_capacity(self) -> int:
+        return self.num_pages * self.page_size
+
+    def free_tokens(self) -> int:
+        return len(self.free_pages) * self.page_size
+
+    def kv_stats(self) -> dict:
+        out = super().kv_stats()
+        out.update(page_size=self.page_size, num_pages=self.num_pages,
+                   pages_used=self.pages_used(),
+                   peak_pages_used=self.peak_pages_used,
+                   kv_util=(self.peak_pages_used * self.page_size
+                            / max(1, self.token_capacity())))
+        return out
+
+    # -- data -------------------------------------------------------------
+    def page_table_array(self) -> jnp.ndarray:
+        # snapshot per dispatch, same aliasing caveat as cache_len_array
+        return jnp.asarray(self.page_table.copy())
+
+    # -- device-side gather/scatter helpers (used inside jitted steps) ----
+    def gather_rows(self, caches: dict, page_tab, tier: int) -> dict:
+        """Gather ``tier`` rows' pages into the contiguous
+        ``(tier, s_max, ...)`` view the model forward expects (the
+        dense tier slice's shape, so decode graphs are shared across
+        backends' shape buckets)."""
+        pt = lax.slice_in_dim(page_tab, 0, tier, axis=0)
+        flat = pt.reshape(-1)
+        out = {}
+        for k, pool in caches.items():
+            if self.batch_dims[k]:              # stacked (L, P, page, ...)
+                g = jnp.take(pool, flat, axis=1)
+                out[k] = g.reshape(pool.shape[0], tier, self.s_max,
+                                   *pool.shape[3:])
+            else:                               # per-layer (P, page, ...)
+                g = jnp.take(pool, flat, axis=0)
+                out[k] = g.reshape(tier, self.s_max, *pool.shape[2:])
+        return out
+
+    def scatter_frontier(self, caches: dict, out: dict, page_tab,
+                         cache_len, tier: int) -> dict:
+        """Write back only the frontier page of each row — the single
+        block a decode step touched (position ``cache_len``).  Rows
+        whose frontier block is unmapped (inactive / mid-chunk rows)
+        target the trash page; duplicate trash indices are harmless
+        because everything landing there is garbage by construction."""
+        pt = lax.slice_in_dim(page_tab, 0, tier, axis=0)
+        clen = lax.slice_in_dim(cache_len, 0, tier, axis=0)
+        blk = clen // self.page_size                        # (t,)
+        phys = jnp.take_along_axis(pt, blk[:, None], axis=1)[:, 0]
+        idx = blk[:, None] * self.page_size \
+            + jnp.arange(self.page_size, dtype=blk.dtype)[None]  # (t, page)
+        new = {}
+        for k, pool in caches.items():
+            o = out[k].astype(pool.dtype)
+            if self.batch_dims[k]:              # o: (L, t, s_max, ...)
+                ix = idx.reshape((1,) + idx.shape + (1,) * (o.ndim - 3))
+                slab = jnp.take_along_axis(
+                    o, jnp.broadcast_to(
+                        ix, o.shape[:2] + (self.page_size,) + o.shape[3:]),
+                    axis=2)
+                new[k] = pool.at[:, phys].set(slab)
+            else:                               # o: (t, s_max, ...)
+                ix = idx.reshape(idx.shape + (1,) * (o.ndim - 2))
+                slab = jnp.take_along_axis(
+                    o, jnp.broadcast_to(
+                        ix, o.shape[:1] + (self.page_size,) + o.shape[2:]),
+                    axis=1)
+                new[k] = pool.at[phys].set(slab)
+        return new
+
+    def scatter_row_pages(self, caches: dict, out: dict, page_row,
+                          first_block, n_blocks: int, seq_off,
+                          seq_len: int) -> dict:
+        """Write one row's ``[seq_off, seq_off + seq_len)`` slab into
+        its mapped pages (``n_blocks`` consecutive blocks starting at
+        ``first_block``).  ``out[k]`` is the row view ``(1, s_max, ...)``
+        (stacked: ``(L, 1, s_max, ...)``); unmapped blocks land in
+        trash."""
+        phys = lax.dynamic_slice(page_row, (first_block,), (n_blocks,))
+        new = {}
+        for k, pool in caches.items():
+            o = out[k].astype(pool.dtype)
+            if self.batch_dims[k]:              # o: (L, 1, s_max, ...)
+                slab = lax.dynamic_slice_in_dim(o, seq_off, seq_len,
+                                                axis=2)
+                slab = slab.reshape(o.shape[0], n_blocks, self.page_size,
+                                    *o.shape[3:])
+                new[k] = pool.at[:, phys].set(slab)
+            else:                               # o: (1, s_max, ...)
+                slab = lax.dynamic_slice_in_dim(o, seq_off, seq_len,
+                                                axis=1)
+                slab = slab.reshape(n_blocks, self.page_size, *o.shape[2:])
+                new[k] = pool.at[phys].set(slab)
+        return new
+
+    def gather_row(self, caches: dict, page_row) -> dict:
+        """Gather one (dynamically indexed) row into its contiguous
+        ``(1, s_max, ...)`` view, for the chunked-prefill step."""
+        out = {}
+        for k, pool in caches.items():
+            if self.batch_dims[k]:
+                g = jnp.take(pool, page_row, axis=1)
+                out[k] = g.reshape(pool.shape[0], 1, self.s_max,
+                                   *pool.shape[3:])
+            else:
+                g = jnp.take(pool, page_row, axis=0)
+                out[k] = g.reshape(1, self.s_max, *pool.shape[2:])
+        return out

@@ -382,3 +382,70 @@ def test_compile_cache_shims_warn_and_behave():
         lp = LoweredPlanCache(capacity=8)
     assert len(lp) == lp.n_plans == 0
     assert lp.plan_capacity == 8
+
+
+# -- Program bundles (save/load one-file deployment) -------------------------
+
+def test_program_bundle_round_trip(tmp_path):
+    """save() packs arch + policy spec + cache backend + plans into one
+    file; load() rebuilds the Program and replays without re-lowering."""
+    from repro.serve import PagedCache
+    path = str(tmp_path / "prog.dfpb")
+    p1 = repro.api.compile("chatglm3-6b", policy="sequential", smoke=True,
+                           cache="paged")
+    p1.prefill(global_batch=1, seq_len=16)
+    n = p1.save(path)
+    assert n > 0
+    misses1 = p1.stats["misses"]
+    assert misses1 > 0
+
+    p2 = repro.api.Program.load(path)
+    assert isinstance(p2.cache_backend, PagedCache)
+    assert p2.policy_spec == "sequential"
+    assert p2.model.cfg.name == p1.model.cfg.name
+    p2.prefill(global_batch=1, seq_len=16)
+    assert p2.stats["misses"] == 0, \
+        f"loaded program re-lowered: {p2.stats}"
+
+
+def test_program_bundle_rejects_bad_header(tmp_path):
+    import json
+
+    from repro.api import ProgramBundleError
+    path = str(tmp_path / "prog.dfpb")
+    p1 = repro.api.compile("chatglm3-6b", policy="sequential", smoke=True)
+    p1.prefill(global_batch=1, seq_len=16)
+    p1.save(path)
+
+    with open(path) as f:
+        lines = f.read().splitlines(True)
+    hdr = json.loads(lines[0])
+    hdr["format_version"] += 1
+    bad = str(tmp_path / "bad.dfpb")
+    with open(bad, "w") as f:
+        f.writelines([json.dumps(hdr) + "\n"] + lines[1:])
+    with pytest.raises(ProgramBundleError, match="format"):
+        repro.api.Program.load(bad)
+
+    junk = str(tmp_path / "junk.dfpb")
+    with open(junk, "w") as f:
+        f.write("not a bundle\n")
+    with pytest.raises(ProgramBundleError):
+        repro.api.Program.load(junk)
+
+
+def test_program_bundle_opaque_policy(tmp_path):
+    """An opaque policy object can't ride in the bundle: load() demands
+    an explicit policy= and trusts it (no salt check); a named policy
+    needs nothing."""
+    from repro.api import ProgramBundleError
+    path = str(tmp_path / "prog.dfpb")
+    p1 = repro.api.compile("chatglm3-6b",
+                           policy=get_strategy("sequential"), smoke=True)
+    p1.prefill(global_batch=1, seq_len=16)
+    p1.save(path)
+    with pytest.raises(ProgramBundleError, match="policy"):
+        repro.api.Program.load(path)
+    p2 = repro.api.Program.load(path, policy="sequential")
+    p2.prefill(global_batch=1, seq_len=16)
+    assert p2.stats["misses"] == 0

@@ -1,0 +1,272 @@
+"""Paged KV cache tests: CacheBackend resolution, page-bookkeeping
+invariants under fuzzed op interleavings, dense-vs-paged bitwise
+equivalence, page-capacity admission, and backend-salted plan keys."""
+import jax
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.configs import get_smoke_config
+from repro.core import PlanStore
+from repro.core.strategies import get_strategy
+from repro.models.layers import MeshInfo
+from repro.models.registry import build_model
+from repro.serve import (
+    DenseCache,
+    PagedCache,
+    PagedKVCacheManager,
+    PagePressure,
+    PromptOverflow,
+    Request,
+    ServeConfig,
+    ServeEngine,
+    Shed,
+    UnpageableCache,
+    resolve_cache_backend,
+)
+from repro.serve.admission import AdmissionContext
+from repro.serve.kv_cache import backend_from_identity, cache_backend_salt
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = get_smoke_config("chatglm3-6b")
+    model = build_model(cfg, MeshInfo(tp=1, dp=1))
+    segs, _ = model.build_segments("prefill", 1, 32, s_max=64)
+    params = model._init_from_segments(segs, jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+def make_engine(model, params, **kw):
+    kw.setdefault("max_batch", 4)
+    kw.setdefault("s_max", 64)
+    kw.setdefault("prefill_buckets", (16, 32))
+    return ServeEngine(model, params, get_strategy("sequential"),
+                       ServeConfig(**kw))
+
+
+def _trace(cfg, rng, n_reqs, max_new=8, chunk_last=True):
+    out = []
+    for i in range(n_reqs):
+        n = 40 if (chunk_last and i == n_reqs - 1) \
+            else int(rng.integers(4, 30))
+        out.append(Request(rid=i,
+                           prompt=rng.integers(0, cfg.vocab, n,
+                                               dtype=np.int32),
+                           max_new_tokens=max_new))
+    return out
+
+
+# -- backend resolution ------------------------------------------------------
+
+def test_backend_resolution():
+    assert isinstance(resolve_cache_backend(None), DenseCache)
+    assert isinstance(resolve_cache_backend("dense"), DenseCache)
+    paged = resolve_cache_backend("paged")
+    assert isinstance(paged, PagedCache)
+    custom = PagedCache(page_size=8, num_pages=7)
+    assert resolve_cache_backend(custom) is custom
+    with pytest.raises(ValueError, match="unknown cache backend"):
+        resolve_cache_backend("ring")
+
+
+def test_backend_identity_round_trip():
+    for b in (DenseCache(), PagedCache(), PagedCache(page_size=8),
+              PagedCache(page_size=16, num_pages=5)):
+        again = backend_from_identity(b.identity())
+        assert again == b
+        assert cache_backend_salt(again) == cache_backend_salt(b)
+    salts = {cache_backend_salt(b) for b in
+             (DenseCache(), PagedCache(), PagedCache(page_size=8))}
+    assert len(salts) == 3, "backend salts must be distinct"
+
+
+def test_page_size_validation(setup):
+    _, model, _ = setup
+    scfg = ServeConfig(max_batch=4, s_max=64, prefill_buckets=(16, 32))
+    with pytest.raises(ValueError, match="divide s_max"):
+        PagedCache(page_size=24).build(model, scfg)
+    with pytest.raises(ValueError, match="prefill bucket"):
+        PagedCache(page_size=16).build(
+            model, ServeConfig(max_batch=4, s_max=64,
+                               prefill_buckets=(24,)))
+    with pytest.raises(ValueError, match="page_size"):
+        PagedCache(page_size=0).build(model, scfg)
+
+
+def test_unpageable_arch_rejected():
+    cfg = get_smoke_config("mamba2-2.7b")
+    model = build_model(cfg, MeshInfo(tp=1, dp=1))
+    scfg = ServeConfig(max_batch=2, s_max=64, prefill_buckets=(16, 32))
+    with pytest.raises(UnpageableCache, match="DenseCache"):
+        PagedCache(page_size=16).build(model, scfg)
+
+
+# -- page-bookkeeping invariants (property fuzz) -----------------------------
+
+def _check_invariants(mgr: PagedKVCacheManager):
+    mapped = [int(p) for p in mgr.page_table.ravel() if p]
+    assert len(mapped) == len(set(mapped)), "a page is aliased by 2 rows"
+    assert 0 not in mapped, "trash page 0 leaked into a page table"
+    assert len(mgr.free_pages) + len(mapped) == mgr.num_pages, \
+        "pages leaked or double-freed"
+    for row in range(mgr.max_batch):
+        used = int(mgr.blocks_used[row])
+        assert all(mgr.page_table[row, :used] > 0), "hole in mapped run"
+        assert not mgr.page_table[row, used:].any(), \
+            "mapped block beyond blocks_used"
+        if row in mgr.row_owner:
+            assert used >= mgr.pages_needed(int(mgr.lengths[row]))
+        else:
+            assert used == 0
+    assert set(mgr.free_rows) | set(mgr.row_owner) == set(
+        range(mgr.max_batch))
+    assert not set(mgr.free_rows) & set(mgr.row_owner)
+
+
+@given(seed=st.integers(min_value=0, max_value=10_000))
+@settings(max_examples=15, deadline=None)
+def test_page_bookkeeping_fuzz(setup, seed):
+    """Random allocate/reserve/release/move_row interleavings never
+    alias a page between rows, leak a page, or map the trash page."""
+    _, model, _ = setup
+    mgr = PagedCache(page_size=16, num_pages=10).build(
+        model, ServeConfig(max_batch=4, s_max=64,
+                           prefill_buckets=(16, 32)))
+    rng = np.random.default_rng(seed)
+    for step in range(120):
+        op = int(rng.integers(4))
+        active = sorted(mgr.row_owner)
+        if op == 0 and mgr.free_rows:
+            row = mgr.allocate(step)
+            assert row is not None
+        elif op == 1 and active:
+            row = active[int(rng.integers(len(active)))]
+            new_len = int(rng.integers(1, mgr.s_max + 8))
+            before = len(mgr.free_pages)
+            ok = mgr.reserve(row, new_len)
+            if ok:
+                mgr.lengths[row] = max(int(mgr.lengths[row]), new_len)
+            else:   # denial must not leak partial allocations
+                assert len(mgr.free_pages) == before
+        elif op == 2 and active:
+            mgr.release(active[int(rng.integers(len(active)))])
+        elif op == 3 and active and mgr.free_rows:
+            src = active[int(rng.integers(len(active)))]
+            dst = mgr.free_rows[int(rng.integers(len(mgr.free_rows)))]
+            pages_before = sorted(
+                int(p) for p in mgr.page_table[src] if p)
+            mgr.move_row(src, dst)
+            # handoff: the SAME physical pages, now under dst
+            assert sorted(int(p) for p in mgr.page_table[dst]
+                          if p) == pages_before
+        _check_invariants(mgr)
+    for row in sorted(mgr.row_owner):
+        mgr.release(row)
+    assert len(mgr.free_pages) == mgr.num_pages
+    assert not mgr.page_table.any()
+
+
+# -- dense vs paged equivalence ----------------------------------------------
+
+def test_dense_paged_bitwise(setup):
+    """Greedy decode on the paged backend is bitwise-identical to the
+    dense backend across a mixed trace that exercises batched prefill,
+    chunked prefill, decode tiers, and compaction."""
+    cfg, model, params = setup
+
+    def run(cache):
+        eng = make_engine(model, params, cache=cache)
+        for r in _trace(cfg, np.random.default_rng(0), 6):
+            eng.submit(r)
+        done = eng.run()
+        assert all(r.ok for r in done), [r.result for r in done]
+        assert eng.cache.row_owner == {}
+        return {r.rid: r.output for r in done}, eng
+
+    dense, _ = run(None)
+    paged, pe = run(PagedCache(page_size=16))
+    assert dense == paged
+    assert len(pe.cache.free_pages) == pe.cache.num_pages
+    assert not pe.cache.page_table.any()
+    assert pe.stats["chunk_steps"] > 0, "trace must exercise chunking"
+
+
+# -- capacity and admission --------------------------------------------------
+
+def test_oversubscribed_pool_drains(setup):
+    """More rows than pages-worth of tokens: the engine degrades via
+    page denials and preemption but every request still terminates and
+    no page leaks."""
+    cfg, model, params = setup
+    eng = make_engine(model, params, max_batch=8,
+                      cache=PagedCache(page_size=16, num_pages=6))
+    for r in _trace(cfg, np.random.default_rng(3), 10, max_new=12,
+                    chunk_last=False):
+        eng.submit(r)
+    done = eng.run()
+    assert len(done) == 10
+    assert all(r.ok for r in done), [r.result for r in done]
+    st = eng.stats
+    assert st["page_denied"] > 0, "pool was never under pressure"
+    assert eng.cache.row_owner == {}
+    assert len(eng.cache.free_pages) == eng.cache.num_pages
+
+
+def test_prompt_overflow_on_page_capacity(setup):
+    cfg, model, params = setup
+    eng = make_engine(model, params,
+                      cache=PagedCache(page_size=16, num_pages=2))
+    with pytest.raises(PromptOverflow):
+        eng.submit(Request(rid=0,
+                           prompt=np.arange(40, dtype=np.int32) % cfg.vocab,
+                           max_new_tokens=4))
+
+
+def test_page_pressure_policy():
+    def ctx(free, cap, prompt):
+        return AdmissionContext(queue_depth=0, active=1, chunking=0,
+                                free_rows=4, max_batch=8,
+                                prompt_len=prompt, priority=0,
+                                waited_s=0.0, deadline_left_s=None,
+                                ttft_left_s=None, free_tokens=free,
+                                capacity_tokens=cap)
+    pol = PagePressure(max_util=0.75)
+    assert isinstance(pol(ctx(free=8, cap=64, prompt=16)), Shed)
+    assert pol(ctx(free=48, cap=64, prompt=16)) is None
+    # backend reported nothing (pre-paging construction): decline
+    assert pol(ctx(free=-1, cap=-1, prompt=16)) is None
+    assert pol.identity() == ("page_pressure", 0.75)
+
+
+# -- plan persistence --------------------------------------------------------
+
+def test_backend_salts_plan_keys(setup):
+    """Dense and paged engines sharing one PlanStore must never collide
+    on exec captures: a dense engine after a paged run pays its own
+    misses, and a second paged engine replays for free."""
+    cfg, model, params = setup
+    store = PlanStore()
+    reqs = lambda: _trace(cfg, np.random.default_rng(1), 4,  # noqa: E731
+                          chunk_last=False)
+
+    def run(cache):
+        eng = ServeEngine(model, params, get_strategy("sequential"),
+                          ServeConfig(max_batch=4, s_max=64,
+                                      prefill_buckets=(16, 32),
+                                      cache=cache),
+                          plan_store=store)
+        for r in reqs():
+            eng.submit(r)
+        assert all(r.ok for r in eng.run())
+        return store.stats["exec_misses"]
+
+    paged_misses = run(PagedCache(page_size=16))
+    assert paged_misses > 0
+    dense_misses = run(None) - paged_misses
+    assert dense_misses > 0, \
+        "dense engine replayed paged captures: backend salt missing"
+    again = run(PagedCache(page_size=16))
+    assert again == paged_misses + dense_misses, \
+        "same-backend engine should hit every exec capture"
