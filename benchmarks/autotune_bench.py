@@ -1,0 +1,125 @@
+"""Autotuner quality gate: auto >= the best hand-picked strategy.
+
+For every (arch x phase x shape) cell, :class:`AutoPolicy` picks a
+winner from the registry's candidate set (ranked with the roofline
+overlap model); the gate checks it never loses to any single hand-picked
+strategy *scored the same way on the same partitioned graph* — by
+construction the argmin cannot lose, so a failure means the tuner and
+the executor disagree about the graph or the objective (exactly the
+regression this gate exists to catch).  Also exercised: verdicts persist
+into a PlanStore artifact and a restarted process re-resolves every cell
+with **zero** re-tunes, and every tuned plan's modeled time is bounded
+by the sequential baseline.
+
+  python benchmarks/autotune_bench.py            # CSV-ish report rows
+  python benchmarks/autotune_bench.py --check    # CI gate (exit code)
+"""
+import os
+import sys
+import tempfile
+
+from repro.configs import get_config
+from repro.core.autotune import AutoPolicy
+from repro.core.plan_store import PlanStore
+from repro.core.policy import with_graph
+from repro.core.scheduler import ScheduleContext, record_plan
+from repro.core.strategies.registry import make_scheduler, \
+    tunable_candidates
+from repro.models.layers import MeshInfo
+from repro.models.registry import build_model
+
+ARCHS = ("chatglm3-6b", "deepseek-moe-16b")
+# (phase, B_loc, S): small decode, large prefill — the two regimes whose
+# winners differ (paper Fig. 2a), plus a mid shape per phase
+SHAPES = (("prefill", 2, 256), ("prefill", 8, 2048),
+          ("decode", 2, 128), ("decode", 64, 2048))
+TP = 16
+
+
+def _cells():
+    for arch in ARCHS:
+        cfg = get_config(arch)
+        model = build_model(cfg, MeshInfo(tp=TP, dp=16,
+                                          attn_impl="chunked"))
+        for phase, B_loc, S in SHAPES:
+            segs, _ = model.build_segments(phase, B_loc, 1 if phase ==
+                                           "decode" else S, s_max=S)
+            seg = max((s for s in segs if s.count > 1),
+                      key=lambda s: len(s.graph.nodes))
+            info = ScheduleContext(local_batch=B_loc, seq_len=S,
+                                   phase=phase, arch=cfg.name,
+                                   mesh_shape={"tp": TP, "dp": 16})
+            yield arch, phase, B_loc, S, seg.graph, info
+
+
+def _hand_picked(auto: AutoPolicy, graph, info):
+    """(label, t) of every hand-picked candidate, scored on the same
+    union-partitioned graph and objective the tuner used."""
+    g = auto._tuning_graph(graph)
+    rows = []
+    for name, params in tunable_candidates():
+        try:
+            plan = record_plan(g, make_scheduler(name, **params), info)
+            rep, _ = auto._score(g, plan, TP)
+        except Exception:
+            continue
+        rows.append((name, rep.t_overlapped))
+    return rows
+
+
+def run(check: bool = False):
+    out, failures = [], []
+    store = PlanStore()
+    auto = AutoPolicy(tp=TP)
+    auto.bind_store(store)
+    cells = list(_cells())
+    for arch, phase, B_loc, S, graph, info in cells:
+        auto(with_graph(info, graph))
+        v = auto.lookup(info, graph)
+        best_hand = min(_hand_picked(auto, graph, info),
+                        key=lambda r: r[1])
+        ratio = best_hand[1] / max(v.t_model, 1e-12)
+        out.append(f"autotune/{arch}/{phase}_B{B_loc}_S{S},"
+                   f"{ratio:.4f},x_best_hand_vs_auto,winner={v.winner}")
+        if v.t_model > best_hand[1] * (1 + 1e-9):
+            failures.append(
+                f"{arch}/{phase} B={B_loc} S={S}: auto chose {v.winner} "
+                f"({v.t_model:.3e}s) but hand-picked {best_hand[0]} is "
+                f"faster ({best_hand[1]:.3e}s)")
+        if v.t_model > v.t_sequential * (1 + 1e-9):
+            failures.append(
+                f"{arch}/{phase} B={B_loc} S={S}: tuned exposed time "
+                f"{v.t_model:.3e}s exceeds sequential "
+                f"{v.t_sequential:.3e}s")
+
+    # restart: a fresh process (fresh policy + store) must inherit every
+    # verdict from the artifact with zero re-tunes
+    path = os.path.join(tempfile.mkdtemp(prefix="autotune-bench-"),
+                        "plans.dfps")
+    store.save(path)
+    store2 = PlanStore()
+    store2.load(path)
+    auto2 = AutoPolicy(tp=TP)
+    auto2.bind_store(store2)
+    for arch, phase, B_loc, S, graph, info in cells:
+        auto2(with_graph(info, graph))
+    out.append(f"autotune/restart_retunes,{auto2.retunes},"
+               f"count_over_{len(cells)}_cells")
+    if auto2.retunes != 0:
+        failures.append(
+            f"restart re-tuned {auto2.retunes}/{len(cells)} cells; "
+            "verdicts did not persist/reload")
+
+    if check:
+        for msg in failures:
+            print(f"autotune-gate FAIL {msg}")
+        for line in out:
+            print(f"autotune-gate OK {line}")
+        return 1 if failures else 0
+    return out
+
+
+if __name__ == "__main__":
+    if len(sys.argv) > 1 and sys.argv[1] == "--check":
+        sys.exit(run(check=True))
+    print("\n".join(run()))

@@ -22,10 +22,11 @@ REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 EXAMPLES = ("examples/quickstart.py", "examples/serve_batched.py",
             "examples/custom_strategy.py", "examples/train_ft.py")
 # pre-facade entry points the flagship examples must not touch
+# (DynamicScheduler( is the PR-8 deprecation: spell it policy="dynamic")
 BANNED = ("record_plan(", "build_global_", "PlanStore.open(",
-          "build_train_step(")
+          "build_train_step(", "DynamicScheduler(")
 FACADE_ONLY = ("examples/quickstart.py", "examples/serve_batched.py",
-               "src/repro/launch/dryrun.py")
+               "src/repro/launch/dryrun.py", "src/repro/launch/serve.py")
 
 
 def _loc(src: str) -> int:

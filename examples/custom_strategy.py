@@ -18,7 +18,8 @@ from repro.core import (Mark, OpSchedulerBase, by_phase,
                         partition, record_plan, resolve_strategy, when)
 from repro.core.plan import OpHandle
 from repro.core.scheduler import ScheduleContext
-from repro.core.strategies import get_strategy
+from repro.core.strategies import (get_strategy, register_strategy,
+                                   tunable_candidates)
 from repro.models.layers import MeshInfo
 from repro.models.registry import build_model
 from repro.roofline.overlap import plan_overlap, split_weight_penalty
@@ -117,6 +118,15 @@ def main():
         my_policy, ScheduleContext(local_batch=8, seq_len=2048,
                                    phase="prefill", arch=cfg.name),
         graph=seg.graph), MyDBO)
+    # ---- one registration makes MyDBO a first-class name ---------------
+    # ``policy="my_dbo"`` now works through repro.api.compile and the
+    # launch --strategy flags, and ``policy="auto"`` ranks it against
+    # every built-in with the same cost model used above.
+    register_strategy("my_dbo", MyDBO)
+    assert isinstance(get_strategy("my_dbo"), MyDBO)
+    assert ("my_dbo", {}) in list(tunable_candidates())
+    print('registered "my_dbo": usable as policy="my_dbo" and swept by '
+          'policy="auto"')
     print("custom_strategy OK — 20 lines of user Python + an 8-line "
           "policy, validated before touching a TPU")
 

@@ -107,7 +107,11 @@ def compile(model, policy=None, mesh=None, plan_store=None,
                   built ``LMBase`` model, or (toy/prototyping path) a
                   traced ``core.Module`` / ``OpGraph``.
     ``policy``  — a ``StrategyPolicy``, a bare ``OpSchedulerBase``, or a
-                  strategy name; default: the built-in dynamic policy.
+                  registry name (``core.strategies.registry`` — e.g.
+                  ``"nanoflow"``, ``"dynamic"``, or ``"auto"`` for the
+                  cost-model autotuner, whose verdicts persist in the
+                  plan store); default: the built-in dynamic policy.
+                  ``Program.explain()`` shows the per-context decisions.
     ``mesh``    — ``None`` (single host), a ``models.layers.MeshInfo``
                   (single host, explicit tp/dp for model construction),
                   or a ``jax.sharding.Mesh`` — steps then come back
@@ -143,6 +147,11 @@ def compile(model, policy=None, mesh=None, plan_store=None,
     store = resolve_plan_store(plan_store, plan_store_path)
     if store is None:
         store = PlanStore()
+    # store-aware policies (AutoPolicy) persist tuning verdicts alongside
+    # the plans they decided — bind before any step builds
+    bind = getattr(policy, "bind_store", None)
+    if callable(bind):
+        bind(store)
 
     if isinstance(model, Module):
         if example_inputs is None:
@@ -228,6 +237,20 @@ class Program:
     @property
     def stats(self) -> dict:
         return self.store.snapshot()
+
+    def explain(self) -> list:
+        """The policy's decision table: one dict per scheduling decision.
+
+        Policies that keep per-context verdicts (``policy="auto"``)
+        report them in full — winner, parameterization, modeled vs
+        sequential time, memory, measurement provenance; every other
+        policy reports a single identity row (what it is and the salt
+        under which its plans persist)."""
+        table = getattr(self.policy, "explain", None)
+        if callable(table):
+            return table()
+        return [{"policy": self.policy_spec or self.policy.name,
+                 "salt": strategy_salt(self.policy)}]
 
     # -- one-file deployment -----------------------------------------------
     def save(self, path: str) -> int:

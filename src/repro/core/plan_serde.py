@@ -62,6 +62,11 @@ from .lowering import Instr, LoweredPlan
 
 MAGIC = "dynaflow-planstore"
 FORMAT_VERSION = 1
+# Version of the "V" (tuning verdict) record schema.  Independent of the
+# entry FORMAT_VERSION: verdicts are an additive record kind (PR 8) —
+# older readers reject unknown "V ..." lines per-line (restore_rejected)
+# and keep restoring plan entries, so artifacts stay forward-shareable.
+VERDICT_VERSION = 1
 
 
 class RestoreError(ValueError):
@@ -223,6 +228,48 @@ def entry_line(outer, analysis: dict, canonical, buckets: Iterable[dict],
         sort_keys=True, separators=(",", ":"))
     check = hashlib.sha256(payload.encode()).hexdigest()[:16]
     return f"E {FORMAT_VERSION} {fp2 or key_digest(outer)} {check} {payload}"
+
+
+# ---------------------------------------------------------------------------
+# verdict records (autotuner decisions)
+# ---------------------------------------------------------------------------
+
+
+def verdict_line(context_fp: str, payload: dict) -> str:
+    """One autotuner verdict record::
+
+        V <verdict_version> <context-fp> <sha256[:16] of payload> <payload>
+
+    Addressed by the *context fingerprint* (``core.autotune``), not the
+    plan outer key: a verdict decides which strategy a context gets
+    before any plan exists.  The payload is the compact-JSON
+    ``TuningVerdict.to_payload()`` dict — pure primitives, no pickle."""
+    body = json.dumps(_to_jsonable(payload), sort_keys=True,
+                      separators=(",", ":"))
+    check = hashlib.sha256(body.encode()).hexdigest()[:16]
+    return f"V {VERDICT_VERSION} {context_fp} {check} {body}"
+
+
+def split_verdict_line(line: str) -> tuple:
+    """Validate and parse a verdict line -> ``(context_fp, payload_dict)``.
+    Raises ``RestoreError`` on a malformed, version-mismatched or
+    corrupt record (caller skips it: cold re-tune, never a crash)."""
+    parts = line.split(" ", 4)
+    if len(parts) != 5 or parts[0] != "V":
+        raise RestoreError(f"malformed verdict line: {line[:40]!r}")
+    _, ver, fp, check, body = parts
+    if ver != str(VERDICT_VERSION):
+        raise RestoreError(
+            f"verdict version {ver} != {VERDICT_VERSION}")
+    if hashlib.sha256(body.encode()).hexdigest()[:16] != check:
+        raise RestoreError("verdict checksum mismatch (corrupt payload)")
+    try:
+        payload = json.loads(body)
+    except (ValueError, TypeError) as e:
+        raise RestoreError(f"unparseable verdict payload: {e}") from None
+    if not isinstance(payload, dict):
+        raise RestoreError("verdict payload is not an object")
+    return fp, payload
 
 
 # ---------------------------------------------------------------------------

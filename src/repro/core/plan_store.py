@@ -64,7 +64,8 @@ from .plan import FINGERPRINT_VERSION, structural_key
 from .plan_serde import (FORMAT_VERSION, RestoreError, encode_analysis,
                          encode_lowered, entry_line, key_digest,
                          parse_payload, persistable_key, read_store,
-                         rehydrate, split_entry_line, write_store)
+                         rehydrate, split_entry_line, split_verdict_line,
+                         verdict_line, write_store)
 
 _ONE_SHOT_CAP = 4096          # bounded one-shot eviction record
 _PASSTHROUGH_CAP = 1024       # max never-redeemed entries kept per save
@@ -152,6 +153,7 @@ class PlanStore:
         # first use) and parsed entries by outer key
         self._restored_raw: dict = {}
         self._restored_parsed: dict = {}
+        self._verdicts: dict = {}                  # context_fp -> payload
         self._dirty = False                        # plan-level state vs disk
         self.stats = {
             "hits": 0, "misses": 0, "shares": 0, "evictions": 0,
@@ -164,6 +166,8 @@ class PlanStore:
             "restore_s": 0.0,
             "exec_hits": 0, "exec_misses": 0, "exec_evictions": 0,
             "exec_bytes": 0, "compile_s": 0.0, "trace_s": 0.0,
+            "verdicts_put": 0, "verdict_hits": 0, "verdict_misses": 0,
+            "verdict_rejected": 0,
         }
 
     # -- plan level --------------------------------------------------------
@@ -318,6 +322,16 @@ class PlanStore:
             self._one_shot.setdefault(dig, None)
         n = 0
         for line in lines:
+            if line.startswith("V "):
+                try:
+                    fp, payload = split_verdict_line(line)
+                except RestoreError:
+                    self.stats["verdict_rejected"] += 1
+                    continue
+                # setdefault: a verdict put live this process wins over
+                # the (older) persisted one
+                self._verdicts.setdefault(fp, payload)
+                continue
             try:
                 fp2, _payload = split_entry_line(line)
             except RestoreError:
@@ -385,6 +399,8 @@ class PlanStore:
         skipped += max(0, len(passthrough) - _PASSTHROUGH_CAP)
         for fp2 in passthrough[:_PASSTHROUGH_CAP]:
             lines.append(self._restored_raw[fp2])
+        for fp, payload in sorted(self._verdicts.items()):
+            lines.append(verdict_line(fp, payload))
         n = write_store(path, lines, one_shot=self._one_shot,
                         fingerprint_version=FINGERPRINT_VERSION)
         self.stats["restore_saved"] = n
@@ -399,6 +415,28 @@ class PlanStore:
         to the bound path — lets periodic checkpoints (serve idle loop)
         skip rewriting an unchanged artifact."""
         return self._dirty
+
+    # -- verdict level -----------------------------------------------------
+    def put_verdict(self, context_fp: str, payload: dict):
+        """Record an autotuner verdict (``core.autotune``) for
+        persistence; last write per context fingerprint wins."""
+        self._verdicts[context_fp] = payload
+        self.stats["verdicts_put"] += 1
+        self._dirty = True
+
+    def get_verdict(self, context_fp: str) -> Optional[dict]:
+        """The persisted/recorded verdict payload for a context
+        fingerprint, or ``None`` (caller re-tunes cold)."""
+        payload = self._verdicts.get(context_fp)
+        if payload is None:
+            self.stats["verdict_misses"] += 1
+        else:
+            self.stats["verdict_hits"] += 1
+        return payload
+
+    @property
+    def verdict_count(self) -> int:
+        return len(self._verdicts)
 
     def _restored_entry(self, outer) -> Optional[dict]:
         parsed = self._restored_parsed.get(outer)

@@ -90,14 +90,24 @@ class StrategyPolicy:
 
 
 def as_policy(obj) -> StrategyPolicy:
-    """Normalize a scheduler, policy, or strategy name into a policy."""
+    """Normalize a scheduler, policy, or registry name into a policy.
+
+    Names resolve through the strategy registry
+    (``core.strategies.registry``): scheduler entries become a
+    ``FixedPolicy``; policy entries (``"dynamic"``, ``"auto"``) resolve
+    to the policy itself, so ``policy="auto"`` reaches ``api.compile``
+    as a live :class:`~repro.core.autotune.AutoPolicy`.  Unknown names
+    raise ``UnknownStrategyError`` listing the registered choices."""
     if isinstance(obj, StrategyPolicy):
         return obj
     if isinstance(obj, OpSchedulerBase):
         return FixedPolicy(obj)
     if isinstance(obj, str):
-        from .strategies import get_strategy
-        return FixedPolicy(get_strategy(obj))
+        from .strategies.registry import get_entry
+        entry = get_entry(obj)
+        if entry.policy_factory is not None:
+            return as_policy(entry.policy_factory())
+        return FixedPolicy(entry.factory())
     raise TypeError(
         f"expected an OpSchedulerBase, StrategyPolicy or strategy name, "
         f"got {type(obj).__name__}")
@@ -148,6 +158,37 @@ class FixedPolicy(StrategyPolicy):
 
     def partition_rules(self):
         return list(self.scheduler.partition_rules())
+
+
+class PolicyScheduler(OpSchedulerBase):
+    """Scheduler adapter over a policy — how policies enter scheduler-land
+    (the inverse of :class:`FixedPolicy`).
+
+    Branch selection is deferred to plan-record time, when the
+    partitioned segment graph is in hand (``pick`` re-injects it under
+    ``extra['graph']`` so graph-conditional predicates see op names).
+    Every pre-facade entry point that passes schedulers around composes
+    with policies through this adapter.
+    """
+
+    name = "policy"
+
+    def __init__(self, policy: StrategyPolicy, name: Optional[str] = None):
+        self.policy = policy
+        self.name = name or getattr(policy, "name", "policy")
+
+    def identity(self):
+        return (self.name, self.policy.identity())
+
+    def partition_rules(self):
+        return self.policy.partition_rules()
+
+    def pick(self, ctx) -> OpSchedulerBase:
+        """Resolve the sub-strategy for a ``SchedCtx`` (record time)."""
+        return self.policy(with_graph(ctx.info, ctx.graph))
+
+    def schedule(self, ctx):
+        self.pick(ctx).schedule(ctx)
 
 
 class _PhasePolicy(StrategyPolicy):

@@ -13,30 +13,37 @@ files is the reproduction of the paper's engineering-cost claim.
                negative result §5.3.5)
   dynamic      context-driven selection among the above (the paper's
                headline contribution: per-bucket strategy choice)
+  auto         cost-model-driven selection + parameterization per context
+               (core/autotune.py — the self-programming closing of the
+               loop)
+
+Since PR 8 the authoritative name -> strategy mapping is the
+**registry** (:mod:`.registry`): ``register_strategy`` adds a strategy
+to every consumer at once (``get_strategy``, ``policy="name"`` through
+``api.compile``, the launch ``--strategy`` flags, and the autotuner's
+candidate enumeration).  ``STRATEGIES`` remains as a read-only
+compatibility view of the registered factories.
 """
 from ..policy import tokens_of  # noqa: F401  (re-export: legacy home)
-from .comet import Comet
-from .dbo import DualBatchOverlap
+from .comet import Comet  # noqa: F401
+from .dbo import DualBatchOverlap  # noqa: F401
 from .dynamic import DynamicScheduler, dynamic_policy  # noqa: F401
-from .flux import Flux
-from .nanoflow import NanoFlow
-from .sbo import SingleBatchOverlap
-from .sequential import Sequential
-from .tokenweave import TokenWeave
+from .flux import Flux  # noqa: F401
+from .nanoflow import NanoFlow  # noqa: F401
+from .registry import (UnknownStrategyError,  # noqa: F401
+                       get_entry, make_scheduler, register_strategy,
+                       strategy_names, tunable_candidates)
+from .registry import _REGISTRY as _REG
+from .sbo import SingleBatchOverlap  # noqa: F401
+from .sequential import Sequential  # noqa: F401
+from .tokenweave import TokenWeave  # noqa: F401
 
-STRATEGIES = {
-    "sequential": Sequential,
-    "nanoflow": NanoFlow,
-    "dbo": DualBatchOverlap,
-    "sbo": SingleBatchOverlap,
-    "tokenweave": TokenWeave,
-    "comet": Comet,
-    "flux": Flux,
-    "dynamic": DynamicScheduler,
-}
+# compatibility view over the registry (name -> factory); prefer
+# get_strategy()/register_strategy() — mutating this dict has no effect
+STRATEGIES = {name: entry.factory for name, entry in sorted(_REG.items())}
 
 
 def get_strategy(name: str, **kw):
-    if name not in STRATEGIES:
-        raise KeyError(f"unknown strategy {name!r}; have {sorted(STRATEGIES)}")
-    return STRATEGIES[name](**kw)
+    """Build a scheduler by registry name.  Unknown names raise
+    :class:`UnknownStrategyError` (a ``KeyError``) listing choices."""
+    return make_scheduler(name, **kw)

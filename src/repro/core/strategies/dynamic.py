@@ -16,9 +16,9 @@ because every pre-facade entry point passes schedulers around):
 """
 import dataclasses
 
-from ..policy import (StrategyPolicy, by_token_threshold, first_viable,
-                      has_ops, local_batch_below, when, with_graph)
-from ..scheduler import OpSchedulerBase
+from ..._deprecation import warn_once
+from ..policy import (PolicyScheduler, StrategyPolicy, by_token_threshold,
+                      first_viable, has_ops, local_batch_below, when)
 from .dbo import DualBatchOverlap
 from .nanoflow import NanoFlow
 from .sbo import SingleBatchOverlap
@@ -57,10 +57,16 @@ def dynamic_policy(split_tokens: int = 2048, seq_tokens: int = 64,
         [(seq_tokens, Sequential()), (split_tokens, sbo)], above=big)
 
 
-class DynamicScheduler(OpSchedulerBase):
+class _DynamicAdapter(PolicyScheduler):
     """Scheduler adapter over ``dynamic_policy`` (or any policy passed as
     ``policy=``): resolves the sub-strategy at plan-record time from the
-    partitioned graph + context, then delegates ``schedule``."""
+    partitioned graph + context, then delegates ``schedule``.
+
+    This is the registry's scheduler-path form of ``"dynamic"``
+    (``get_strategy("dynamic")``) and carries no deprecation warning —
+    the name, identity tuple and PlanStore salts are unchanged from the
+    pre-PR-8 ``DynamicScheduler``, so persisted artifacts keep
+    redeeming."""
 
     name = "dynamic"
 
@@ -69,18 +75,21 @@ class DynamicScheduler(OpSchedulerBase):
         self.split_tokens = split_tokens
         self.seq_tokens = seq_tokens
         self.fuse = fuse
-        self.policy = policy or dynamic_policy(split_tokens, seq_tokens,
-                                               fuse)
+        super().__init__(policy or dynamic_policy(split_tokens, seq_tokens,
+                                                  fuse),
+                         name="dynamic")
 
-    def identity(self):
-        return ("dynamic", self.policy.identity())
 
-    def partition_rules(self):
-        return self.policy.partition_rules()
+class DynamicScheduler(_DynamicAdapter):
+    """Deprecated entry point for the built-in pick table.
 
-    def pick(self, ctx):
-        """Resolve the sub-strategy for a ``SchedCtx`` (record time)."""
-        return self.policy(with_graph(ctx.info, ctx.graph))
+    Spell the same behavior as ``policy="dynamic"`` (registry name, the
+    ``api.compile`` path), ``get_strategy("dynamic")`` (scheduler
+    adapter), or ``dynamic_policy()`` (the combinator tree itself) —
+    or close the loop entirely with ``policy="auto"``."""
 
-    def schedule(self, ctx):
-        self.pick(ctx).schedule(ctx)
+    def __init__(self, *args, **kwargs):
+        warn_once("repro.core.strategies.DynamicScheduler",
+                  "policy='dynamic' (the strategy registry) or "
+                  "dynamic_policy()")
+        super().__init__(*args, **kwargs)

@@ -9,6 +9,7 @@ PEAK_FLOPS_BF16 = 197e12  # FLOP/s per chip
 HBM_BW = 819e9            # bytes/s per chip
 ICI_BW_PER_LINK = 50e9    # bytes/s per link
 ICI_LINKS_PER_CHIP = 4    # 2D torus within a pod: +x,-x,+y,-y (v5e-256 is a 16x16 torus)
+COLL_LATENCY_S = 20e-6    # collective launch latency: ring setup + per-hop
 VMEM_BYTES = 128 * 1024 * 1024  # ~128 MiB VMEM per chip (v5e class)
 MXU_TILE = 128            # systolic array native tile edge
 HBM_BYTES = 16e9          # 16 GiB HBM per v5e chip

@@ -27,7 +27,12 @@ def main(argv=None):
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--max-batch", type=int, default=4)
     ap.add_argument("--s-max", type=int, default=128)
-    ap.add_argument("--strategy", default="dynamic")
+    from repro.core.strategies.registry import strategy_names
+    ap.add_argument("--strategy", default="dynamic",
+                    choices=strategy_names(),
+                    help="strategy registry name; 'dynamic' = built-in "
+                         "pick table, 'auto' = cost-model autotuner "
+                         "(verdicts persist via --plan-store)")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--prefill-batch", type=int, default=4,
                     help="max requests packed into one prefill call")

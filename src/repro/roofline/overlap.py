@@ -28,10 +28,14 @@ from .. import hw
 from ..core.graph import FULL, OpGraph
 from ..core.plan import ExecutionPlan, PlanStep
 
-COLL_LATENCY_S = 20e-6          # ring setup + per-hop latency per call
+# Back-compat alias: the canonical constant lives in hw.py so the whole
+# hardware model is calibrated in one place; prefer the ``coll_latency_s``
+# parameter of ``plan_overlap`` for per-fabric calibration.
+COLL_LATENCY_S = hw.COLL_LATENCY_S
 
 
-def _wire_seconds(node, scale: float, bw_scale: float = 1.0) -> float:
+def _wire_seconds(node, scale: float, bw_scale: float = 1.0,
+                  coll_latency_s: float = hw.COLL_LATENCY_S) -> float:
     """ICI time of a network node; for composite (coalesced) units only
     the network members' bytes travel the wire — the fused memory ops
     (dispatch build etc.) are charged to the HBM pipe separately.
@@ -48,7 +52,7 @@ def _wire_seconds(node, scale: float, bw_scale: float = 1.0) -> float:
             (0.25 if "a2a" in kind or "all_to_all" in kind else 1.0)
         wire += (payload * factor
                  / (hw.ICI_LINKS_PER_CHIP * hw.ICI_BW_PER_LINK * bw_scale)
-                 + COLL_LATENCY_S)
+                 + coll_latency_s)
     return wire
 
 
@@ -64,12 +68,13 @@ def _local_seconds(node, scale: float) -> float:
     return t
 
 
-def _op_seconds(graph, node, scale: float = 1.0, bw_scale: float = 1.0):
+def _op_seconds(graph, node, scale: float = 1.0, bw_scale: float = 1.0,
+                coll_latency_s: float = hw.COLL_LATENCY_S):
     """(engine, t_total, t_wire) — wire is the collective part only."""
     has_net = node.resource == "network" or (
         node.members and any(m.resource == "network" for m in node.members))
     if has_net:
-        w = _wire_seconds(node, scale, bw_scale)
+        w = _wire_seconds(node, scale, bw_scale, coll_latency_s)
         return "ici", w + _local_seconds(node, scale), w
     t_c = node.flops * scale / hw.PEAK_FLOPS_BF16
     t_m = node.bytes_moved * scale / hw.HBM_BW
@@ -77,32 +82,36 @@ def _op_seconds(graph, node, scale: float = 1.0, bw_scale: float = 1.0):
 
 
 def _fused_seconds(graph, step: PlanStep, scales, tp: int,
-                   bw_scale: float = 1.0):
+                   bw_scale: float = 1.0,
+                   coll_latency_s: float = hw.COLL_LATENCY_S):
     """(engine, t_total, t_wire) for a fused step, by replacement kind."""
     nets = [(h, graph.nodes[h.oid]) for h in step.handles
             if graph.nodes[h.oid].resource == "network"]
     rest = [(h, graph.nodes[h.oid]) for h in step.handles
             if graph.nodes[h.oid].resource != "network"]
-    t_wire = sum(_wire_seconds(n, scales[h], bw_scale) - COLL_LATENCY_S
+    t_wire = sum(_wire_seconds(n, scales[h], bw_scale, coll_latency_s)
+                 - coll_latency_s
                  for h, n in nets)
-    t_rest = sum(_op_seconds(graph, n, scales[h])[1] for h, n in rest)
+    t_rest = sum(_op_seconds(graph, n, scales[h],
+                             coll_latency_s=coll_latency_s)[1]
+                 for h, n in rest)
     name = step.replace_name
     if name == "tokenweave":
         # RS + AG (same bytes as AR); elementwise work on 1/tp tokens
-        w = t_wire + 2 * COLL_LATENCY_S
+        w = t_wire + 2 * coll_latency_s
         return "ici", w + t_rest / max(tp, 1), w
     if name == "comet":
         # self-overlapped pipeline: GEMM-dominated, charge compute engine;
         # only the un-hidden wire remains collective
         G = 4
         exposed_wire = (t_wire / G + max(0.0, t_wire * (G - 1) / G - t_rest)
-                        + G * 2 * COLL_LATENCY_S)
+                        + G * 2 * coll_latency_s)
         return "mxu", exposed_wire + t_rest, exposed_wire
     if name == "flux":
         G = 4
-        w = t_wire + G * COLL_LATENCY_S
+        w = t_wire + G * coll_latency_s
         return "ici", w + t_rest, w
-    w = t_wire + len(nets) * COLL_LATENCY_S
+    w = t_wire + len(nets) * coll_latency_s
     return "ici", w + t_rest, w
 
 
@@ -120,10 +129,13 @@ class OverlapReport:
 
 def plan_overlap(graph: OpGraph, plan: ExecutionPlan, tp: int = 16,
                  extra_weight_read_bytes: float = 0.0,
-                 bw_scale: float = 1.0) -> OverlapReport:
+                 bw_scale: float = 1.0,
+                 coll_latency_s: float = hw.COLL_LATENCY_S) -> OverlapReport:
     """Model the plan.  ``extra_weight_read_bytes``: additional HBM reads
     from micro-batch splitting (each extra micro-batch re-reads weights —
-    the paper's Fig. 2a penalty), charged to the memory pipe."""
+    the paper's Fig. 2a penalty), charged to the memory pipe.
+    ``coll_latency_s`` calibrates the per-collective launch latency for
+    the target fabric (default: the hw.py TPU-pod ICI figure)."""
     nparts = plan.num_mb
     sizes = plan.split_sizes or (1,)
     total = float(sum(sizes))
@@ -139,11 +151,13 @@ def plan_overlap(graph: OpGraph, plan: ExecutionPlan, tp: int = 16,
         merged = step.kind == "merged"
         if step.kind == "fused":
             scales = {h: scale_of(h, False) for h in step.handles}
-            eng, t, w = _fused_seconds(graph, step, scales, tp, bw_scale)
+            eng, t, w = _fused_seconds(graph, step, scales, tp, bw_scale,
+                                       coll_latency_s)
         else:
             h = step.handles[0]
             eng, t, w = _op_seconds(graph, graph.nodes[h.oid],
-                                    scale_of(h, merged), bw_scale)
+                                    scale_of(h, merged), bw_scale,
+                                    coll_latency_s)
         costs.append((eng, t, w))
         r, w = set(), set()
         for h in step.handles:

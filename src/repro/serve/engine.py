@@ -277,6 +277,15 @@ class ServeEngine:
         self._op_config = model.op_closure_config() + (
             ("cache_backend", self.backend.identity()),)
         self._cache_tag = cache_backend_salt(self.backend)
+        # store-aware policies (AutoPolicy, possibly wrapped in a
+        # PolicyScheduler adapter) persist tuning verdicts in this
+        # engine's store and take live step-timing feedback
+        target = getattr(scheduler, "policy", scheduler)
+        bind = getattr(target, "bind_store", None)
+        if callable(bind):
+            bind(self.store)
+        self._observer = getattr(target, "observe", None)
+        self._obs_prev = None      # (tier, perf_counter) of last dispatch
         # the built-in deadline gate always runs first: a request whose
         # deadline/TTFT budget expired in the queue sheds even under the
         # default admit-everything policy
@@ -1226,8 +1235,31 @@ class ServeEngine:
                 self._gen[row] += 1
             self._stats["decode_steps"] += 1
             self._stats["tier_steps"][tier] += 1
+            if self._observer is not None:
+                self._feed_observer(tier)
             return (tok, done, snapshot)
         return None
+
+    def _feed_observer(self, tier: int):
+        """Feed the policy live step timings: the wall clock between two
+        successive same-tier decode dispatches bounds one device step
+        (the loop is double-buffered — dispatch N+1 waits on step N), so
+        it is the cheapest honest signal that needs no extra sync."""
+        t_now = time.perf_counter()
+        prev = self._obs_prev
+        self._obs_prev = (tier, t_now)
+        if prev is None or prev[0] != tier:
+            return
+        try:
+            self._observer(
+                phase="decode", arch=self.model.cfg.name,
+                local_batch=tier, seq_len=self.cfg.s_max,
+                seconds=t_now - prev[1],
+                stats={"decode_steps": self._stats["decode_steps"],
+                       "active": len(self.active),
+                       "shed": self._stats["shed"]})
+        except Exception:                           # noqa: BLE001
+            self._observer = None   # a broken observer never kills serving
 
     # -- harvest ----------------------------------------------------------
     def _harvest(self, pending):
