@@ -294,6 +294,14 @@ def run(plan_store_path=None, with_serve=False):
                     "serve/decode_tier_lowers",
                     "serve/tiered_syncs_per_decode"):
             out.append(srows[key].replace("serve/", "overhead/serve_", 1))
+        # speculative-decode summary on the repeat-heavy greedy workload
+        sprows = {r.split(",")[0]: r
+                  for r in serve_bench.run(repeats=2, spec="ngram")}
+        for key in ("serve/spec_plain_tps", "serve/spec_accepted_tps",
+                    "serve/spec_speedup", "serve/spec_acceptance_rate",
+                    "serve/spec_syncs_per_decode",
+                    "serve/spec_verify_lowers"):
+            out.append(sprows[key].replace("serve/", "overhead/serve_", 1))
     return out
 
 

@@ -529,7 +529,11 @@ class Program:
     def serve(self, params, cfg=None, **overrides):
         """Construct a :class:`ServeEngine` over the program's model,
         policy and (shared, already warm-started) PlanStore.  Pass a
-        ``ServeConfig`` or its fields as keyword overrides."""
+        ``ServeConfig`` or its fields as keyword overrides — including
+        ``sampling=SamplingConfig(...)`` for on-device sampled decode
+        and ``spec=SpecConfig(...)`` for speculative multi-token decode
+        (both route through the same tier/specialize machinery and the
+        program's store)."""
         self._require_lm("serve")
         if self.mesh is not None:
             raise NotImplementedError(

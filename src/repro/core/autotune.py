@@ -268,6 +268,10 @@ class AutoPolicy(StrategyPolicy):
         self._verdicts: dict = {}        # context_fp -> TuningVerdict
         self._schedulers: dict = {}      # context_fp -> scheduler
         self._ctx_groups: dict = {}      # (arch, phase, b, s) -> {fp}
+        # speculative-decode draft-k feedback (ServeEngine spec loop):
+        # (arch, k) -> {"rate", "seconds", "steps"} EWMAs
+        self._spec_obs: dict = {}
+        self._spec_loaded: set = set()   # arches with persisted obs read
 
     # identity() deliberately excludes the measurement knobs: a measured
     # and a model-only AutoPolicy share the verdict namespace (measured
@@ -455,7 +459,14 @@ class AutoPolicy(StrategyPolicy):
         """Live feedback from the serving loop: fold a measured step time
         (EWMA) into every verdict recorded for this context group and
         persist meaningful changes, so ``explain()`` and future processes
-        see model-vs-reality drift."""
+        see model-vs-reality drift.
+
+        Speculative-decode feedback (``stats`` carrying ``draft_k``)
+        routes to the per-(arch, k) acceptance/latency EWMAs behind
+        :meth:`spec_draft_k` instead."""
+        if stats and "draft_k" in stats:
+            self._observe_spec(arch, int(stats["draft_k"]), seconds, stats)
+            return
         del stats   # reserved: admission/store counters for future re-tune
         key = (arch, phase, int(local_batch), int(seq_len))
         for fp in self._ctx_groups.get(key, ()):
@@ -470,6 +481,70 @@ class AutoPolicy(StrategyPolicy):
             self._verdicts[fp] = v
             if changed and self._store is not None:
                 self._store.put_verdict(fp, v.to_payload())
+
+    # -- speculative draft-k tuning ------------------------------------------
+    def _spec_fp(self, arch: str) -> str:
+        """Synthetic verdict key for the per-arch draft-k scoreboard —
+        same PlanStore verdict namespace, disjoint by construction from
+        any schedule-context fingerprint."""
+        payload = ("spec_decode", AUTOTUNE_VERSION, arch)
+        return hashlib.sha256(repr(payload).encode()).hexdigest()[:16]
+
+    def _spec_load(self, arch: str):
+        if arch in self._spec_loaded:
+            return
+        self._spec_loaded.add(arch)
+        if self._store is None:
+            return
+        payload = self._store.get_verdict(self._spec_fp(arch))
+        if not payload or payload.get("version") != AUTOTUNE_VERSION:
+            return
+        for ks, rec in (payload.get("obs") or {}).items():
+            try:
+                self._spec_obs.setdefault((arch, int(ks)), {
+                    "rate": float(rec["rate"]),
+                    "seconds": float(rec["seconds"]),
+                    "steps": int(rec["steps"])})
+            except (KeyError, TypeError, ValueError):
+                continue            # corrupt/foreign entry: re-learn
+
+    def _observe_spec(self, arch: str, k: int, seconds: float,
+                      stats: dict):
+        self._spec_load(arch)
+        rec = self._spec_obs.setdefault(
+            (arch, k), {"rate": 0.0, "seconds": 0.0, "steps": 0})
+        rate = float(stats.get("acceptance_rate") or 0.0)
+        if rec["steps"] == 0:
+            rec["rate"], rec["seconds"] = rate, float(seconds)
+        else:
+            rec["rate"] = 0.8 * rec["rate"] + 0.2 * rate
+            rec["seconds"] = 0.8 * rec["seconds"] + 0.2 * float(seconds)
+        rec["steps"] += 1
+        # persist on first sight and then sparsely — the serve loop
+        # calls this once per verify step
+        if self._store is not None and rec["steps"] % 8 == 1:
+            obs = {str(kk): dict(v)
+                   for (a, kk), v in self._spec_obs.items() if a == arch}
+            self._store.put_verdict(self._spec_fp(arch), {
+                "kind": "spec_decode", "version": AUTOTUNE_VERSION,
+                "arch": arch, "obs": obs})
+
+    def spec_draft_k(self, *, arch: str, candidates) -> int:
+        """Pick the draft length for ``SpecConfig(k="auto")``: explore
+        each candidate once, then maximize expected accepted-tokens/s —
+        ``(1 + k * acceptance_rate(k)) / seconds(k)`` from the live
+        EWMAs (seeded from the persisted scoreboard on restart)."""
+        self._spec_load(arch)
+        for k in candidates:
+            if (arch, int(k)) not in self._spec_obs:
+                return int(k)
+
+        def score(k):
+            rec = self._spec_obs[(arch, int(k))]
+            return (1.0 + int(k) * rec["rate"]) \
+                / max(rec["seconds"], 1e-9)
+
+        return int(max(candidates, key=score))
 
     def explain(self) -> list:
         """Decision table: one row per verdict this policy holds, sorted

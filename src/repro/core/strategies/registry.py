@@ -144,6 +144,17 @@ def _auto_scheduler(**kw):
     return PolicyScheduler(_auto_as_policy(**kw), name="auto")
 
 
+def _spec_decode_scheduler(**kw):
+    # spec_decode is a knob carrier, not a graph scheduler: the serve
+    # engine reads its param_space ("draft_k") for SpecConfig(k="auto")
+    # candidates, while the op-schedule of the verify step is whatever
+    # strategy/policy the engine was compiled with.  Resolving it as a
+    # strategy hands back plain sequential scheduling.
+    from .sequential import Sequential
+    kw.pop("draft_k", None)
+    return Sequential(**kw)
+
+
 def _register_builtins():
     from .comet import Comet
     from .dbo import DualBatchOverlap
@@ -164,6 +175,12 @@ def _register_builtins():
                       policy_factory=_dynamic_as_policy, tunable=False)
     register_strategy("auto", _auto_scheduler,
                       policy_factory=_auto_as_policy, tunable=False)
+    # draft-k tunable for serve-side speculative decode.  tunable=False
+    # keeps it out of the autotuner's *scheduler* sweep (it does not
+    # schedule ops); AutoPolicy.spec_draft_k picks from this param_space
+    # using acceptance rates fed through AutoPolicy.observe.
+    register_strategy("spec_decode", _spec_decode_scheduler,
+                      {"draft_k": (2, 4, 8)}, tunable=False)
 
 
 _register_builtins()

@@ -311,16 +311,24 @@ class TrainHead(Module):
 
 
 class LogitsHead(Module):
-    """Prefill/decode head: final-position vocab-sharded logits."""
+    """Prefill/decode head: vocab-sharded logits.
 
-    def __init__(self, cfg: ArchConfig, mesh: MeshInfo, sp: bool):
+    ``keep_last=True`` (prefill) slices to the final position before the
+    head matmul; ``keep_last=False`` (decode) keeps every position so a
+    width-k verify step (speculative decode) sees all k+1 logits.  For
+    the plain decode bucket (S=1) the two are the same computation —
+    the slice is the identity — so decode tokens are bitwise unchanged.
+    """
+
+    def __init__(self, cfg: ArchConfig, mesh: MeshInfo, sp: bool,
+                 keep_last: bool = True):
         super().__init__()
         d = cfg.d_model
         self.sp = sp
         self.ln = RMSNormOp(d, "ln_f")
         if sp:
             self.ag = AllGatherOp(mesh, dim=1, name="ag_head")
-        self.last = TakeLastOp()
+        self.last = TakeLastOp() if keep_last else None
         tie = ("embed", "emb") if cfg.tie_embeddings else None
         self.out = LmHeadOp(d, cfg.vocab, mesh, tie_path=tie)
         self.named("head")
@@ -329,7 +337,8 @@ class LogitsHead(Module):
         h = self.ln(x)
         if self.sp:
             h = self.ag(h)
-        h = self.last(h)
+        if self.last is not None:
+            h = self.last(h)
         return {"logits": self.out(h)}
 
 

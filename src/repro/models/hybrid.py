@@ -141,7 +141,8 @@ class HybridLM(LMBase):
     def make_head(self, phase):
         if phase == "train":
             return TrainHead(self.cfg, self.mesh, sp=False)
-        return LogitsHead(self.cfg, self.mesh, sp=False)
+        return LogitsHead(self.cfg, self.mesh, sp=False,
+                          keep_last=(phase != "decode"))
 
     def cache_specs(self, stack_name, B_loc, s_max):
         cfg = self.cfg

@@ -380,7 +380,8 @@ class Mamba2LM(LMBase):
     def make_head(self, phase):
         if phase == "train":
             return TrainHead(self.cfg, self.mesh, sp=False)
-        return LogitsHead(self.cfg, self.mesh, sp=False)
+        return LogitsHead(self.cfg, self.mesh, sp=False,
+                          keep_last=(phase != "decode"))
 
     def cache_specs(self, stack_name, B_loc, s_max):
         s = self.cfg.ssm

@@ -594,7 +594,8 @@ class MoELM(LMBase):
         sp = self.cfg.seq_parallel and phase != "decode"
         if phase == "train":
             return TrainHead(self.cfg, self.mesh, sp)
-        return LogitsHead(self.cfg, self.mesh, sp)
+        return LogitsHead(self.cfg, self.mesh, sp,
+                          keep_last=(phase != "decode"))
 
     def cache_specs(self, stack_name, B_loc, s_max):
         lay = self.layout

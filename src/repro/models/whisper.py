@@ -360,7 +360,8 @@ class WhisperLM(LMBase):
             segs.append(Segment("decoder", dmod, g, count=cfg.n_layers,
                                 scan_outputs=sc_out))
         head = (TrainHead(cfg, mesh, sp=False) if phase == "train"
-                else LogitsHead(cfg, mesh, sp=False))
+                else LogitsHead(cfg, mesh, sp=False,
+                                keep_last=(phase != "decode")))
         head_in = {"x": x_sds}
         hbd = {"x": 0}
         if phase == "train":

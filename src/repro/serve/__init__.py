@@ -31,3 +31,12 @@ from .kv_cache import (
     UnpageableCache,
     resolve_cache_backend,
 )
+from .sampling import GREEDY, SamplingConfig, resolve_sampling, sampling_salt
+from .speculative import (
+    DRAFT_K_CANDIDATES,
+    NGramProposer,
+    Proposer,
+    SelfSpecProposer,
+    SpecConfig,
+    resolve_proposer,
+)

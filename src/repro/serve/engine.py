@@ -116,6 +116,8 @@ from .admission import (
 )
 from .faults import PoisonedRequest
 from .kv_cache import cache_backend_salt, resolve_cache_backend
+from .sampling import resolve_sampling, sample_tokens, sampling_salt
+from .speculative import DRAFT_K_CANDIDATES, SpecConfig, resolve_proposer
 
 
 def pow2_tiers(n: int) -> tuple:
@@ -137,6 +139,7 @@ class Request:
     priority: int = 0                  # higher preempts lower under load
     deadline_s: Optional[float] = None     # wall-clock budget from submit
     ttft_budget_s: Optional[float] = None  # budget to the first token
+    seed: Optional[int] = None             # sampling seed (None: engine seed)
     # filled by the engine:
     output: list = dataclasses.field(default_factory=list)
     row: int = -1
@@ -167,6 +170,22 @@ class ServeConfig:
     prefill_buckets: tuple = (32, 64, 128, 256)
     greedy: bool = True
     lowered: bool = True               # slot-based lowered plan replay
+    # On-device sampling policy (serve/sampling.py): a SamplingConfig or
+    # None for greedy argmax (the historical behavior, bitwise-identical
+    # compiled graph).  The policy — never any seed — salts the
+    # executable-cache keys, so two engines with different seeds share
+    # every capture.
+    sampling: object = None
+    # Engine-wide sampling seed; Request(seed=) overrides per request.
+    # Seeds are runtime arguments of the captured steps and never enter
+    # a PlanStore key.
+    seed: int = 0
+    # Speculative multi-token decode (serve/speculative.py): a
+    # SpecConfig or None (plain one-token decode).  The verify step runs
+    # the decode graph at query width k+1 — just another shape bucket of
+    # the canonical decode lowering, so it specializes without any new
+    # lower() after warm-up.
+    spec: object = None
     # Tiered decode: captures at these batch sizes (ascending, last ==
     # max_batch).  None = power-of-two tiers.  A single-element tuple
     # (max_batch,) recovers the fixed-batch baseline.
@@ -286,6 +305,55 @@ class ServeEngine:
             bind(self.store)
         self._observer = getattr(target, "observe", None)
         self._obs_prev = None      # (tier, perf_counter) of last dispatch
+        # on-device sampling: the policy (static, baked into the capture)
+        # salts exec keys; seeds/rids/positions are runtime args
+        self.sampling = resolve_sampling(cfg.sampling)
+        self._samp_salt = sampling_salt(self.sampling)
+        # speculative decode state
+        if cfg.spec is not None and not isinstance(cfg.spec, SpecConfig):
+            raise ValueError(
+                "ServeConfig.spec must be a serve.SpecConfig or None")
+        self._spec = cfg.spec
+        if self._spec is not None:
+            self._proposer = resolve_proposer(self._spec.proposer)
+            self._spec_sampling = resolve_sampling(
+                self._spec.sampling if self._spec.sampling is not None
+                else cfg.sampling)
+            self._spec_salt = sampling_salt(self._spec_sampling)
+            self._k_candidates = self._spec_k_candidates()
+            self._k_picker = getattr(target, "spec_draft_k", None)
+            kmax = (self._spec.k if isinstance(self._spec.k, int)
+                    else max(self._k_candidates))
+            # verify width k+1 must not exceed the smallest chunk length
+            # (chunk-row garbage beyond the frontier is only overwritten
+            # when the next chunk's slab covers it) nor s_max headroom
+            if kmax + 1 > cfg.prefill_buckets[0]:
+                raise ValueError(
+                    f"speculative draft k={kmax} needs verify width "
+                    f"{kmax + 1} <= the smallest prefill bucket "
+                    f"{cfg.prefill_buckets[0]}")
+            # rollback is length bookkeeping, which only works for
+            # positional (attention) caches: recurrent SSM states
+            # advance irreversibly, so a rejected draft would corrupt
+            # them
+            bad = [key for key in model.decode_cache_layout()
+                   if not (key.endswith("k_cache")
+                           or key.endswith("v_cache"))]
+            if bad:
+                raise ValueError(
+                    "speculative decode needs positional decode caches "
+                    f"(rollback = length decrement); {model.cfg.name} "
+                    f"has non-positional state {bad}")
+        else:
+            self._proposer = None
+            self._spec_sampling = self.sampling
+            self._spec_salt = self._samp_salt
+            self._k_candidates = DRAFT_K_CANDIDATES
+            self._k_picker = None
+        self._spec_t0 = 0.0        # perf_counter of the last spec dispatch
+        # per-row sampling identity mirrors (compacted alongside _gen)
+        self._row_seed = np.zeros((cfg.max_batch,), np.uint32)
+        self._row_rid = np.zeros((cfg.max_batch,), np.int32)
         # the built-in deadline gate always runs first: a request whose
         # deadline/TTFT budget expired in the queue sheds even under the
         # default admit-everything policy
@@ -320,6 +388,9 @@ class ServeEngine:
                        "resumed": 0, "deadline_missed": 0,
                        "alloc_denied": 0, "page_denied": 0,
                        "peak_active": 0, "stranded": 0, "drains": 0,
+                       "spec_steps": 0, "spec_drafted": 0,
+                       "spec_accepted": 0, "spec_rollbacks": 0,
+                       "spec_fallbacks": 0, "spec_builds": {},
                        "tier_steps": {t: 0 for t in self.tiers},
                        "tier_builds": {}}
         self._ck = self._cache_keys()
@@ -379,7 +450,13 @@ class ServeEngine:
             self.faults.on_iter(it)        # injected straggler
         self._admit()
         handle = self._dispatch_decode()
-        if self.cfg.async_host:
+        if self._spec is not None:
+            # speculative steps harvest synchronously: how far each row
+            # advanced (the accepted count) is data-dependent, so the
+            # host mirrors cannot move at dispatch time.  Still exactly
+            # one device_get per decode iteration.
+            self._harvest(handle)
+        elif self.cfg.async_host:
             # double-buffered: step k+1 is now in flight; only then
             # pay the (single) host sync for step k's tokens
             prev, self._pending = self._pending, handle
@@ -444,6 +521,15 @@ class ServeEngine:
         so tier switches under load never hit a cold build."""
         for t in tiers or self.tiers:
             self._decode_fn(t)
+            if self._spec is not None:
+                ks = ([self._spec.k] if isinstance(self._spec.k, int)
+                      else list(self._k_candidates))
+                for k in ks:
+                    # after _decode_fn(t): the canonical decode lowering
+                    # exists, so verify buckets purely specialize
+                    self._spec_verify_fn(t, k)
+                    if self._proposer.device:
+                        self._spec_draft_fn(t, k)
 
     def checkpoint(self) -> int:
         """Persist the PlanStore when it is path-bound (via
@@ -601,6 +687,24 @@ class ServeEngine:
             if t >= n:
                 return t
         return tiers[-1]
+
+    def _req_seed(self, req: Request) -> np.uint32:
+        return np.uint32(req.seed if req.seed is not None
+                         else self.cfg.seed)
+
+    def _spec_k_candidates(self) -> tuple:
+        """Draft-k candidates for ``SpecConfig(k="auto")``: the
+        registered ``spec_decode`` param_space when present, else the
+        built-in set."""
+        try:
+            from ..core.strategies import registry as _registry
+            space = dict(_registry.get_entry("spec_decode").param_space)
+            ks = tuple(int(v) for v in space.get("draft_k", ()))
+            if ks:
+                return ks
+        except Exception:                           # noqa: BLE001
+            pass
+        return DRAFT_K_CANDIDATES
 
     def _pressure_rows(self) -> int:
         return (self.faults.pressure_rows(self._cur_iter)
@@ -770,12 +874,20 @@ class ServeEngine:
             rows = np.full((bp,), group[0].row, np.int32)
             full = np.zeros((bp,), bool)
             sent_last = np.zeros((bp,), np.int32)
+            seeds = np.zeros((bp,), np.uint32)
+            rids = np.zeros((bp,), np.int32)
+            pos_emit = np.zeros((bp,), np.int32)
             for j, (req, pr) in enumerate(zip(group, prompts)):
                 n = len(pr)
                 ids[j, :n] = pr[:n]
                 rows[j] = req.row
                 full[j] = n == bucket
                 sent_last[j] = int(pr[n - 1])
+                seeds[j] = self._req_seed(req)
+                rids[j] = req.rid
+                pos_emit[j] = n       # a full bucket emits position n
+                self._row_seed[req.row] = seeds[j]
+                self._row_rid[req.row] = req.rid
             try:
                 if self.faults is not None:
                     self.faults.check_dispatch(
@@ -783,6 +895,8 @@ class ServeEngine:
                 fn = self._prefill_fn(bp, bucket)
                 args = [self.params, jnp.asarray(ids), jnp.asarray(rows),
                         jnp.asarray(full), jnp.asarray(sent_last),
+                        jnp.asarray(seeds), jnp.asarray(rids),
+                        jnp.asarray(pos_emit),
                         self.cache.caches, self._last_ids]
                 if self.cache.paged:
                     args.append(self.cache.page_table_array())
@@ -837,17 +951,19 @@ class ServeEngine:
             ck = self._ck
             cache = self.cache
             bds = cache.batch_dims
+            samp = self.sampling
 
             if cache.paged:
                 nb = bucket // cache.page_size
 
-                def run(params, ids, rows, full, sent_last, caches,
-                        last_ids, page_tab):
+                def run(params, ids, rows, full, sent_last, seeds, rids,
+                        pos_emit, caches, last_ids, page_tab):
                     pos = jnp.broadcast_to(
                         jnp.arange(bucket, dtype=jnp.int32), (bp, bucket))
                     out = fwd(params, {"ids": ids, "positions": pos})
-                    tok = jnp.argmax(out["logits"][:, -1, :],
-                                     axis=-1).astype(jnp.int32)
+                    tok = sample_tokens(out["logits"][:, -1, :], samp,
+                                        seeds=seeds, rids=rids,
+                                        positions=pos_emit)
                     caches = dict(caches)
                     li = last_ids[:, 0]
                     # reversed: padded slots alias rows[0]'s page-table
@@ -869,14 +985,16 @@ class ServeEngine:
                             jnp.where(full[j], tok[j], sent_last[j]))
                     return tok, caches, li[:, None]
 
-                return _jit(run, donate=(5, 6))
+                return _jit(run, donate=(8, 9))
 
-            def run(params, ids, rows, full, sent_last, caches, last_ids):
+            def run(params, ids, rows, full, sent_last, seeds, rids,
+                    pos_emit, caches, last_ids):
                 pos = jnp.broadcast_to(jnp.arange(bucket, dtype=jnp.int32),
                                        (bp, bucket))
                 out = fwd(params, {"ids": ids, "positions": pos})
-                tok = jnp.argmax(out["logits"][:, -1, :],
-                                 axis=-1).astype(jnp.int32)
+                tok = sample_tokens(out["logits"][:, -1, :], samp,
+                                    seeds=seeds, rids=rids,
+                                    positions=pos_emit)
                 caches = dict(caches)
                 li = last_ids[:, 0]
                 # reversed: padded slots (which alias rows[0]) run first,
@@ -901,10 +1019,11 @@ class ServeEngine:
                         jnp.where(full[j], tok[j], sent_last[j]))
                 return tok, caches, li[:, None]
 
-            return _jit(run, donate=(5, 6))
+            return _jit(run, donate=(8, 9))
 
         return self.store.get_or_build(
-            ("prefill", self._cache_tag, bp, bucket), build)
+            ("prefill", self._cache_tag, self._samp_salt, bp, bucket),
+            build)
 
     # -- chunked prefill --------------------------------------------------
     def _chunk_plan(self, n: int) -> list:
@@ -950,6 +1069,8 @@ class ServeEngine:
             return
         if req._resume is not None:
             self._stats["resumed"] += 1
+        self._row_seed[row] = self._req_seed(req)
+        self._row_rid[row] = req.rid
         # chunks cover [0, n-1) and may fall exactly one token short of
         # the prompt (position n-1 travels via the sentinel decode), so
         # size the staging buffer for whichever is longer
@@ -960,53 +1081,82 @@ class ServeEngine:
                                "next": 0})
 
     def _step_chunked(self):
-        """Dispatch one pending chunk (round-robin head), writing its KV
-        in-place; when the final chunk is in flight the request joins
-        ``active`` and its first token arrives via the sentinel decode
-        step like any bucket-padded prefill.  No host sync here.  A
-        dispatch fault fails only this request."""
+        """Dispatch the pending chunk of the round-robin head — packed
+        with every other in-progress chunked prefill whose next chunk
+        has the *same* length (one bucketed call over a real batch
+        dimension, batch padded to a power-of-two slab tier), writing
+        their KV in-place; when a request's final chunk is in flight it
+        joins ``active`` and its first token arrives via the sentinel
+        decode step like any bucket-padded prefill.  No host sync here.
+        A dispatch fault fails exactly the packed requests."""
         if not self._chunking:
             return
-        st = self._chunking.pop(0)
-        req, row = st["req"], st["req"].row
-        off, c = st["chunks"][st["next"]]
+        head = self._chunking.pop(0)
+        c = head["chunks"][head["next"]][1]
+        batch = [head]
+        keep = []
+        for st in self._chunking:
+            if (len(batch) < self.cfg.prefill_batch
+                    and st["chunks"][st["next"]][1] == c):
+                batch.append(st)
+            else:
+                keep.append(st)
+        self._chunking = keep
+        bc = self._tier_for(len(batch), self.prefill_tiers)
+        ids = np.zeros((bc, c), np.int32)
+        offs = np.zeros((bc,), np.int32)
+        rows = np.full((bc,), batch[0]["req"].row, np.int32)
+        for j, st in enumerate(batch):
+            off = st["chunks"][st["next"]][0]
+            ids[j] = st["padded"][off:off + c]
+            offs[j] = off
+            rows[j] = st["req"].row
+        # padded slots duplicate slot 0: identical writes are order-safe
+        for j in range(len(batch), bc):
+            ids[j], offs[j] = ids[0], offs[0]
         try:
             if self.faults is not None:
-                self.faults.check_dispatch("chunk", [req.rid])
-            fn = self._chunk_fn(c)
-            args = [self.params, jnp.asarray(st["padded"][off:off + c])[None],
-                    jnp.asarray(off, jnp.int32), jnp.asarray(row, jnp.int32),
-                    self.cache.caches]
+                self.faults.check_dispatch(
+                    "chunk", [st["req"].rid for st in batch])
+            fn = self._chunk_fn(bc, c)
+            args = [self.params, jnp.asarray(ids), jnp.asarray(offs),
+                    jnp.asarray(rows), self.cache.caches]
             if self.cache.paged:
                 args.append(self.cache.page_table_array())
             self.cache.caches = fn(*args)
         except Exception as e:                      # noqa: BLE001
-            self._fail_request(req, f"chunk dispatch failed: {e}")
+            for st in batch:
+                self._fail_request(st["req"], f"chunk dispatch failed: {e}")
             return
         self._stats["chunk_steps"] += 1
-        self.dispatch_log.append(("chunk", req.rid))
-        st["next"] += 1
-        if st["next"] < len(st["chunks"]):
-            # keep the host length mirror at the chunk frontier: a decode
-            # step interleaved before the next chunk writes one garbage
-            # k/v at this position for the (inactive) row, and the next
-            # chunk's full-slab write overwrites it
-            self.cache.lengths[row] = off + c
-            self._chunking.append(st)          # round-robin: to the back
-            return
-        prompt = st["prompt"]
-        n = len(prompt)
-        self._last_ids = self._last_ids.at[row, 0].set(int(prompt[n - 1]))
-        self.cache.lengths[row] = n - 1
-        self._gen[row] = len(req.output)
-        req.output.append(-100)
-        self.active[row] = req
+        self.dispatch_log.append(
+            ("chunk", tuple(st["req"].rid for st in batch)))
+        for j, st in enumerate(batch):
+            req, row = st["req"], st["req"].row
+            off = int(offs[j])
+            st["next"] += 1
+            if st["next"] < len(st["chunks"]):
+                # keep the host length mirror at the chunk frontier: a
+                # decode step interleaved before the next chunk writes
+                # one garbage k/v at this position for the (inactive)
+                # row, and the next chunk's full-slab write overwrites it
+                self.cache.lengths[row] = off + c
+                self._chunking.append(st)      # round-robin: to the back
+                continue
+            prompt = st["prompt"]
+            n = len(prompt)
+            self._last_ids = self._last_ids.at[row, 0].set(
+                int(prompt[n - 1]))
+            self.cache.lengths[row] = n - 1
+            self._gen[row] = len(req.output)
+            req.output.append(-100)
+            self.active[row] = req
 
-    def _chunk_fn(self, chunk: int) -> Callable:
+    def _chunk_fn(self, bc: int, chunk: int) -> Callable:
         def build():
-            segs, _ = self.model.build_segments("decode", 1, chunk,
+            segs, _ = self.model.build_segments("decode", bc, chunk,
                                                 s_max=self.cfg.s_max)
-            info = ScheduleContext(local_batch=1, seq_len=self.cfg.s_max,
+            info = ScheduleContext(local_batch=bc, seq_len=self.cfg.s_max,
                                    phase="decode", arch=self.model.cfg.name)
             fwd = build_forward(segs, self.scheduler, info,
                                 lowered=self.cfg.lowered,
@@ -1019,37 +1169,53 @@ class ServeEngine:
             if cache.paged:
                 nbc = chunk // cache.page_size
 
-                def run(params, ids, off, row, caches, page_tab):
-                    pos = (off + jnp.arange(chunk, dtype=jnp.int32))[None]
-                    pt_row = jnp.take(page_tab, row, axis=0)
-                    rcaches = cache.gather_row(caches, pt_row)
+                def run(params, ids, offs, rows, caches, page_tab):
+                    pos = offs[:, None] \
+                        + jnp.arange(chunk, dtype=jnp.int32)[None]
+                    pt_rows = jnp.take(page_tab, rows, axis=0)
+                    rcaches = cache.gather_row_batch(caches, pt_rows)
                     out = fwd(params, {"ids": ids, "positions": pos,
-                                       "cache_len": off[None], **rcaches})
+                                       "cache_len": offs, **rcaches})
                     # chunk offsets are bucket sums and buckets are page
-                    # multiples (validated at backend build), so the
-                    # chunk's slab is exactly nbc whole blocks
-                    return cache.scatter_row_pages(
-                        caches, out, pt_row, off // cache.page_size, nbc,
-                        off, chunk)
+                    # multiples (validated at backend build), so each
+                    # slot's slab is exactly nbc whole blocks.  Reversed
+                    # unroll: padded slots duplicate slot 0, so slot 0's
+                    # (identical) write lands last
+                    new = dict(caches)
+                    for j in reversed(range(bc)):
+                        out_j = {k: lax.slice_in_dim(
+                                     out[k], j, j + 1,
+                                     axis=1 if bds[k] else 0)
+                                 for k in caches}
+                        new.update(cache.scatter_row_pages(
+                            new, out_j, pt_rows[j],
+                            offs[j] // cache.page_size, nbc, offs[j],
+                            chunk))
+                    return new
 
                 return _jit(run, donate=(4,))
 
-            def run(params, ids, off, row, caches):
-                pos = (off + jnp.arange(chunk, dtype=jnp.int32))[None]
-                rcaches = {k: lax.dynamic_slice_in_dim(v, row, 1,
-                                                       axis=bds[k])
+            def run(params, ids, offs, rows, caches):
+                pos = offs[:, None] \
+                    + jnp.arange(chunk, dtype=jnp.int32)[None]
+                rcaches = {k: jnp.take(v, rows, axis=bds[k])
                            for k, v in caches.items()}
                 out = fwd(params, {"ids": ids, "positions": pos,
-                                   "cache_len": off[None], **rcaches})
-                return {k: lax.dynamic_update_slice_in_dim(
-                            caches[k], out[k].astype(caches[k].dtype), row,
+                                   "cache_len": offs, **rcaches})
+                new = dict(caches)
+                for j in reversed(range(bc)):
+                    for k in caches:
+                        slab = lax.slice_in_dim(out[k], j, j + 1,
+                                                axis=bds[k])
+                        new[k] = lax.dynamic_update_slice_in_dim(
+                            new[k], slab.astype(new[k].dtype), rows[j],
                             axis=bds[k])
-                        for k in caches}
+                return new
 
             return _jit(run, donate=(4,))
 
         return self.store.get_or_build(
-            ("chunk", self._cache_tag, chunk), build)
+            ("chunk", self._cache_tag, bc, chunk), build)
 
     # -- decode -----------------------------------------------------------
     def _decode_fn(self, tier: int) -> Callable:
@@ -1070,11 +1236,12 @@ class ServeEngine:
                 for k in ("misses", "shares", "restore_hits")}
             cache = self.cache
             bds = cache.batch_dims
+            samp = self.sampling
 
             if cache.paged:
 
                 def run(params, last_ids, cache_len, active, eos,
-                        will_end, caches, page_tab):
+                        will_end, seeds, rids, caches, page_tab):
                     ids = lax.slice_in_dim(last_ids, 0, tier, axis=0)
                     clen = lax.slice_in_dim(cache_len, 0, tier, axis=0)
                     # gather the tier's pages into the contiguous
@@ -1089,18 +1256,21 @@ class ServeEngine:
                     # the tier prefix) scatter into the trash page
                     new_caches = cache.scatter_frontier(
                         caches, out, page_tab, cache_len, tier)
-                    tok_t = jnp.argmax(out["logits"][:, -1, :],
-                                       axis=-1).astype(jnp.int32)
+                    tok_t = sample_tokens(
+                        out["logits"][:, -1, :], samp,
+                        seeds=lax.slice_in_dim(seeds, 0, tier, axis=0),
+                        rids=lax.slice_in_dim(rids, 0, tier, axis=0),
+                        positions=clen + 1)
                     tok = lax.dynamic_update_slice(last_ids[:, 0], tok_t,
                                                    (0,))
                     tok = jnp.where(active, tok, last_ids[:, 0])
                     done = active & (will_end | (tok == eos))
                     return tok, done, tok[:, None], new_caches
 
-                return _jit(run, donate=(1, 6))
+                return _jit(run, donate=(1, 8))
 
             def run(params, last_ids, cache_len, active, eos, will_end,
-                    caches):
+                    seeds, rids, caches):
                 ids = lax.slice_in_dim(last_ids, 0, tier, axis=0)
                 clen = lax.slice_in_dim(cache_len, 0, tier, axis=0)
                 tcaches = {k: lax.slice_in_dim(v, 0, tier, axis=bds[k])
@@ -1112,17 +1282,20 @@ class ServeEngine:
                         caches[k], out[k].astype(caches[k].dtype), 0,
                         axis=bds[k])
                     for k in caches}
-                tok_t = jnp.argmax(out["logits"][:, -1, :],
-                                   axis=-1).astype(jnp.int32)
+                tok_t = sample_tokens(
+                    out["logits"][:, -1, :], samp,
+                    seeds=lax.slice_in_dim(seeds, 0, tier, axis=0),
+                    rids=lax.slice_in_dim(rids, 0, tier, axis=0),
+                    positions=clen + 1)
                 tok = lax.dynamic_update_slice(last_ids[:, 0], tok_t, (0,))
                 tok = jnp.where(active, tok, last_ids[:, 0])
                 done = active & (will_end | (tok == eos))
                 return tok, done, tok[:, None], new_caches
 
-            return _jit(run, donate=(1, 6))
+            return _jit(run, donate=(1, 8))
 
         return self.store.get_or_build(
-            ("decode", self._cache_tag, tier), build)
+            ("decode", self._cache_tag, self._samp_salt, tier), build)
 
     def _compact(self, tier: int):
         """Restore the prefix invariant: every allocated row < tier —
@@ -1138,6 +1311,8 @@ class ServeEngine:
             self.cache.move_row(src, dst)
             self._last_ids = self._last_ids.at[dst].set(self._last_ids[src])
             self._gen[dst] = self._gen[src]
+            self._row_seed[dst] = self._row_seed[src]
+            self._row_rid[dst] = self._row_rid[src]
             if src in self.active:
                 req = self.active.pop(src)
                 req.row = dst
@@ -1197,6 +1372,14 @@ class ServeEngine:
             # overwritten by the next chunk — see _step_chunked)
             tier = self._tier_for(occ, self.tiers)
             self._compact(tier)
+            if self._spec is not None:
+                k = self._spec_k_for_dispatch()
+                if k:
+                    result = self._dispatch_spec(tier, k)
+                    if result == "retry":
+                        continue
+                    return result
+                self._stats["spec_fallbacks"] += 1
             active = np.zeros((B,), bool)
             will_end = np.zeros((B,), bool)
             eos = np.full((B,), -1, np.int32)
@@ -1213,10 +1396,15 @@ class ServeEngine:
                     self.faults.check_dispatch(
                         "decode", [r.rid for _, r in snapshot])
                 fn = self._decode_fn(tier)
+                # .copy(): on CPU jnp.asarray may alias the host buffer,
+                # and these mirrors mutate between dispatch and execute
                 args = [self.params, self._last_ids,
                         self.cache.cache_len_array(),
                         jnp.asarray(active), jnp.asarray(eos),
-                        jnp.asarray(will_end), self.cache.caches]
+                        jnp.asarray(will_end),
+                        jnp.asarray(self._row_seed.copy()),
+                        jnp.asarray(self._row_rid.copy()),
+                        self.cache.caches]
                 if self.cache.paged:
                     args.append(self.cache.page_table_array())
                 tok, done, self._last_ids, self.cache.caches = fn(*args)
@@ -1261,6 +1449,332 @@ class ServeEngine:
         except Exception:                           # noqa: BLE001
             self._observer = None   # a broken observer never kills serving
 
+    # -- speculative decode -----------------------------------------------
+    def _pick_k(self) -> int:
+        """Draft length for this iteration: the static ``SpecConfig.k``,
+        or — under ``k="auto"`` — the policy's pick from measured
+        acceptance (``AutoPolicy.spec_draft_k``), defaulting to 4."""
+        if isinstance(self._spec.k, int):
+            return self._spec.k
+        if self._k_picker is not None:
+            try:
+                k = int(self._k_picker(arch=self.model.cfg.name,
+                                       candidates=self._k_candidates))
+                if k >= 1:
+                    return k
+            except Exception:                       # noqa: BLE001
+                self._k_picker = None   # broken picker: fall back, once
+        return 4 if 4 in self._k_candidates else self._k_candidates[0]
+
+    def _spec_k_for_dispatch(self) -> int:
+        """Decide whether this iteration can run speculatively and at
+        what k; 0 means fall back to plain one-token decode.  A verify
+        step writes ``W = k + 1`` cache positions per allocated row
+        (active rows at their frontier; chunk rows write garbage the
+        next chunk slab overwrites), so every row needs W positions of
+        headroom and — paged — W positions of reserved pages.  Any page
+        shortfall or injected allocation denial falls back rather than
+        failing rows: plain decode only needs the +1 the caller already
+        reserved."""
+        k = self._pick_k()
+        W = k + 1
+        for row in self.active:
+            if int(self.cache.lengths[row]) + W > self.cfg.s_max:
+                return 0
+        for st in self._chunking:
+            off, c = st["chunks"][st["next"]]
+            if c < W or int(self.cache.lengths[st["req"].row]) + W \
+                    > self.cfg.s_max:
+                return 0
+        if self.cache.paged:
+            for row in sorted(self.active):
+                need = self.cache.pages_needed(
+                    int(self.cache.lengths[row]) + W)
+                if need > int(self.cache.blocks_used[row]):
+                    if self.faults is not None \
+                            and self.faults.deny_alloc():
+                        self._stats["alloc_denied"] += 1
+                        return 0
+                if not self.cache.reserve(
+                        row, int(self.cache.lengths[row]) + W):
+                    self._stats["page_denied"] += 1
+                    return 0
+        return k
+
+    def _dispatch_spec(self, tier: int, k: int):
+        """Dispatch one speculative verify step: draft k tokens per
+        active row, run the decode graph once at query width k + 1, and
+        return the handle the (synchronous) harvest consumes.  Host
+        mirrors do NOT advance here — how far each row moved is the
+        data-dependent accepted count, applied at harvest.  Returns
+        ``"retry"`` after excising a poisoned request."""
+        B = self.cfg.max_batch
+        active = np.zeros((B,), bool)
+        eos = np.full((B,), -1, np.int32)
+        gen_left = np.ones((B,), np.int32)
+        snapshot = []
+        for row, req in self.active.items():
+            active[row] = True
+            eos[row] = req.eos_id
+            gen_left[row] = max(1, req.max_new_tokens - self._gen[row])
+            snapshot.append((row, req))
+        try:
+            if self.faults is not None:
+                self.faults.check_dispatch(
+                    "decode", [r.rid for _, r in snapshot])
+            drafts = self._make_drafts(tier, k, snapshot)
+            fn = self._spec_verify_fn(tier, k)
+            args = [self.params, self._last_ids,
+                    self.cache.cache_len_array(),
+                    jnp.asarray(active), jnp.asarray(eos),
+                    jnp.asarray(gen_left),
+                    jnp.asarray(self._row_seed.copy()),
+                    jnp.asarray(self._row_rid.copy()),
+                    drafts, self.cache.caches]
+            if self.cache.paged:
+                args.append(self.cache.page_table_array())
+            u, n_emit, done, self._last_ids, self.cache.caches = fn(*args)
+        except PoisonedRequest as e:
+            bad = next(r for _, r in snapshot if r.rid == e.rid)
+            self._fail_request(bad, e)
+            return "retry"
+        except Exception as e:                      # noqa: BLE001
+            for _, req in snapshot:
+                self._fail_request(req, f"decode dispatch failed: {e}")
+            return None
+        self._stats["decode_steps"] += 1
+        self._stats["spec_steps"] += 1
+        self._stats["spec_drafted"] += k * len(snapshot)
+        self._stats["tier_steps"][tier] += 1
+        self._spec_t0 = time.perf_counter()
+        return ("spec", u, n_emit, done, snapshot, k, tier)
+
+    def _make_drafts(self, tier: int, k: int, snapshot: list):
+        """(tier, k) int32 draft tokens: device proposers run their
+        captured draft step; host proposers see each row's current token
+        stream (the trailing ``-100`` sentinel is a placeholder, not a
+        token — popped before drafting)."""
+        if self._proposer.device:
+            fn = self._spec_draft_fn(tier, k)
+            args = [self.params, self._last_ids,
+                    self.cache.cache_len_array(),
+                    jnp.asarray(self._row_seed.copy()),
+                    jnp.asarray(self._row_rid.copy()),
+                    self.cache.caches]
+            if self.cache.paged:
+                args.append(self.cache.page_table_array())
+            return fn(*args)
+        drafts = np.zeros((tier, k), np.int32)
+        streams, rows = [], []
+        for row, req in snapshot:
+            s = list(req.prompt) + list(req.output)
+            if s and s[-1] == -100:
+                s.pop()
+            streams.append(s)
+            rows.append(row)
+        if streams:
+            got = np.asarray(self._proposer.draft(streams, k), np.int32)
+            for i, row in enumerate(rows):
+                drafts[row] = got[i]
+        return jnp.asarray(drafts)
+
+    def _spec_verify_fn(self, tier: int, k: int) -> Callable:
+        """The verify step: the canonical decode graph at query width
+        ``W = k + 1`` — just another shape bucket, so after ``warmup``
+        (or any plain decode build) it *specializes* off the canonical
+        decode lowering with zero new ``lower()`` calls (asserted via
+        ``stats["spec_builds"]``).  Accepts the longest draft prefix
+        matching what the target itself emits, plus one corrected
+        token; eos / token-budget / s_max cuts mirror the plain decode
+        ``will_end``/``done`` semantics position by position, which is
+        what makes greedy speculative decode bitwise-identical to plain
+        greedy decode."""
+        W = k + 1
+
+        def build():
+            before = dict(self.store.stats)
+            segs, _ = self.model.build_segments(
+                "decode", tier, W, s_max=self.cfg.s_max)
+            info = ScheduleContext(local_batch=tier, seq_len=self.cfg.s_max,
+                                   phase="decode", arch=self.model.cfg.name)
+            fwd = build_forward(segs, self.scheduler, info,
+                                lowered=self.cfg.lowered,
+                                plan_cache=self.store if self.cfg.lowered
+                                else None,
+                                op_config=self._op_config)
+            st = self.store.stats
+            self._stats["spec_builds"][(tier, k)] = {
+                key: st[key] - before[key]
+                for key in ("misses", "shares", "restore_hits")}
+            cache = self.cache
+            bds = cache.batch_dims
+            samp = self._spec_sampling
+            s_max = self.cfg.s_max
+
+            def body(params, last_ids, clen, act, eo, gl, sd, rd,
+                     drafts, tcaches):
+                ids = jnp.concatenate(
+                    [lax.slice_in_dim(last_ids, 0, tier, axis=0), drafts],
+                    axis=1)                                   # (tier, W)
+                pos = clen[:, None] \
+                    + jnp.arange(W, dtype=jnp.int32)[None]    # (tier, W)
+                out = fwd(params, {"ids": ids, "positions": pos,
+                                   "cache_len": clen, **tcaches})
+                # u[:, j]: the token the target emits at stream position
+                # clen + 1 + j given the draft prefix — drawn with the
+                # exact (seed, rid, position) key plain decode would use
+                u = sample_tokens(out["logits"], samp,
+                                  seeds=sd[:, None], rids=rd[:, None],
+                                  positions=pos + 1)          # (tier, W)
+                match = (drafts == u[:, :k]).astype(jnp.int32)
+                m = jnp.sum(jnp.cumprod(match, axis=1), axis=1)
+                n_base = m + 1            # accepted prefix + correction
+                steps = jnp.arange(W, dtype=jnp.int32)[None]
+                hit = (u == eo[:, None]) & (eo[:, None] >= 0) \
+                    & (steps < n_base[:, None])
+                any_eos = hit.any(axis=1)
+                first_eos = jnp.argmax(hit, axis=1).astype(jnp.int32)
+                n_emit = jnp.where(any_eos, first_eos + 1, n_base)
+                n_emit = jnp.minimum(n_emit, gl)
+                n_emit = jnp.minimum(n_emit, s_max - 1 - clen)
+                n_emit = jnp.where(act, jnp.maximum(n_emit, 1), 0)
+                new_last = jnp.take_along_axis(
+                    u, jnp.maximum(n_emit - 1, 0)[:, None], axis=1)[:, 0]
+                done = act & ((any_eos & (first_eos < n_emit))
+                              | (n_emit >= gl)
+                              | (clen + n_emit >= s_max - 1))
+                li = last_ids[:, 0]
+                li = lax.dynamic_update_slice(
+                    li, jnp.where(act, new_last,
+                                  lax.slice_in_dim(li, 0, tier, axis=0)),
+                    (0,))
+                return out, u, n_emit, done, li
+
+            if cache.paged:
+
+                def run(params, last_ids, cache_len, active, eos,
+                        gen_left, seeds, rids, drafts, caches, page_tab):
+                    clen = lax.slice_in_dim(cache_len, 0, tier, axis=0)
+                    sl = lambda a: lax.slice_in_dim(a, 0, tier, axis=0)  # noqa: E731
+                    tcaches = cache.gather_rows(caches, page_tab, tier)
+                    out, u, n_emit, done, li = body(
+                        params, last_ids, clen, sl(active), sl(eos),
+                        sl(gen_left), sl(seeds), sl(rids), drafts,
+                        tcaches)
+                    new_caches = cache.scatter_span(
+                        caches, out, page_tab, cache_len, tier, W)
+                    return u, n_emit, done, li[:, None], new_caches
+
+                return _jit(run, donate=(1, 9))
+
+            def run(params, last_ids, cache_len, active, eos, gen_left,
+                    seeds, rids, drafts, caches):
+                clen = lax.slice_in_dim(cache_len, 0, tier, axis=0)
+                sl = lambda a: lax.slice_in_dim(a, 0, tier, axis=0)  # noqa: E731
+                tcaches = {ck: lax.slice_in_dim(v, 0, tier, axis=bds[ck])
+                           for ck, v in caches.items()}
+                out, u, n_emit, done, li = body(
+                    params, last_ids, clen, sl(active), sl(eos),
+                    sl(gen_left), sl(seeds), sl(rids), drafts, tcaches)
+                new_caches = {
+                    ck: lax.dynamic_update_slice_in_dim(
+                        caches[ck], out[ck].astype(caches[ck].dtype), 0,
+                        axis=bds[ck])
+                    for ck in caches}
+                return u, n_emit, done, li[:, None], new_caches
+
+            return _jit(run, donate=(1, 9))
+
+        return self.store.get_or_build(
+            ("spec_verify", self._cache_tag, self._spec_salt, tier, k),
+            build)
+
+    def _spec_draft_fn(self, tier: int, k: int) -> Callable:
+        """Self-speculative draft step: k width-1 decode passes through
+        the first ``n`` layers of the *same* model.  The layer-stack
+        ``lax.scan`` infers its length from the xs leading dim, so
+        slicing the stacked params and caches to ``n`` layers replays
+        the already-lowered per-layer decode plans — zero new lowers.
+        Draft-step cache updates are discarded (read-only drafting);
+        the verify step rewrites every touched position."""
+        def build():
+            stacks = self.model.layer_stacks("decode")
+            scanned = [s for s in stacks if s[2] > 1]
+            if len(stacks) != 1 or not scanned:
+                raise ValueError(
+                    "SelfSpecProposer needs a model whose decode phase "
+                    "is a single scanned layer stack; "
+                    f"{self.model.cfg.name} has "
+                    f"{[s[0] for s in stacks]} — use the 'ngram' "
+                    "proposer instead")
+            stack_name, total = stacks[0][0], stacks[0][2]
+            n = self._proposer.n_layers or max(1, total // 2)
+            n = min(n, total)
+            segs, _ = self.model.build_segments(
+                "decode", tier, 1, s_max=self.cfg.s_max)
+            info = ScheduleContext(local_batch=tier, seq_len=self.cfg.s_max,
+                                   phase="decode", arch=self.model.cfg.name)
+            fwd = build_forward(segs, self.scheduler, info,
+                                lowered=self.cfg.lowered,
+                                plan_cache=self.store if self.cfg.lowered
+                                else None,
+                                op_config=self._op_config)
+            cache = self.cache
+            bds = cache.batch_dims
+            if any(not bds[ck] for ck in bds):
+                raise ValueError(
+                    "SelfSpecProposer needs stacked decode caches")
+            samp = self._spec_sampling
+
+            def body(params, last_ids, clen, sd, rd, tcaches):
+                sub = dict(params)
+                sub[stack_name] = jax.tree_util.tree_map(
+                    lambda x: x[:n], params[stack_name])
+                dc = {ck: lax.slice_in_dim(v, 0, n, axis=0)
+                      for ck, v in tcaches.items()}
+                cur = lax.slice_in_dim(last_ids, 0, tier, axis=0)
+                cl = clen
+                toks = []
+                for _ in range(k):
+                    out = fwd(sub, {"ids": cur, "positions": cl[:, None],
+                                    "cache_len": cl, **dc})
+                    tok = sample_tokens(out["logits"][:, -1, :], samp,
+                                        seeds=sd, rids=rd,
+                                        positions=cl + 1)
+                    dc = {ck: out[ck].astype(dc[ck].dtype) for ck in dc}
+                    cur = tok[:, None]
+                    cl = cl + 1
+                    toks.append(tok)
+                return jnp.stack(toks, axis=1)                # (tier, k)
+
+            if cache.paged:
+
+                def run(params, last_ids, cache_len, seeds, rids, caches,
+                        page_tab):
+                    clen = lax.slice_in_dim(cache_len, 0, tier, axis=0)
+                    tcaches = cache.gather_rows(caches, page_tab, tier)
+                    return body(params, last_ids, clen,
+                                lax.slice_in_dim(seeds, 0, tier, axis=0),
+                                lax.slice_in_dim(rids, 0, tier, axis=0),
+                                tcaches)
+
+                return _jit(run)
+
+            def run(params, last_ids, cache_len, seeds, rids, caches):
+                clen = lax.slice_in_dim(cache_len, 0, tier, axis=0)
+                tcaches = {ck: lax.slice_in_dim(v, 0, tier, axis=bds[ck])
+                           for ck, v in caches.items()}
+                return body(params, last_ids, clen,
+                            lax.slice_in_dim(seeds, 0, tier, axis=0),
+                            lax.slice_in_dim(rids, 0, tier, axis=0),
+                            tcaches)
+
+            return _jit(run)
+
+        return self.store.get_or_build(
+            ("spec_draft", self._cache_tag, self._spec_salt,
+             self._proposer.identity(), tier, k), build)
+
     # -- harvest ----------------------------------------------------------
     def _harvest(self, pending):
         """The loop's single host sync: fetch the pending decode step's
@@ -1272,12 +1786,18 @@ class ServeEngine:
         prefills, self._pending_prefill = self._pending_prefill, []
         if pending is None and not prefills:
             return
-        fetch = list(pending[:2]) if pending is not None else []
+        spec = pending is not None and isinstance(pending[0], str)
+        if spec:
+            fetch = list(pending[1:4])     # u, n_emit, done
+        elif pending is not None:
+            fetch = list(pending[:2])
+        else:
+            fetch = []
+        i = len(fetch)
         fetch.extend(t for t, _ in prefills)
         vals = jax.device_get(fetch)
         self._stats["host_syncs"] += 1
         now = time.perf_counter()
-        i = 2 if pending is not None else 0
         # prefill first: in sync mode the same harvest also carries the
         # first decode step of the just-admitted rows
         for (_, slots), toks in zip(prefills, vals[i:]):
@@ -1298,6 +1818,9 @@ class ServeEngine:
                 except Exception as e:              # noqa: BLE001
                     self._fail_request(req, f"harvest failed: {e}")
         if pending is None:
+            return
+        if spec:
+            self._harvest_spec(vals, pending, now)
             return
         tok, done, snapshot = np.asarray(vals[0]), np.asarray(vals[1]), \
             pending[2]
@@ -1321,6 +1844,58 @@ class ServeEngine:
                     self._fail_deadline(req, now)
             except Exception as e:                  # noqa: BLE001
                 self._fail_request(req, f"harvest failed: {e}")
+
+    def _harvest_spec(self, vals, pending, now: float):
+        """Apply one verify step's results: append each row's accepted
+        tokens (+ the correction), advance the host mirrors by the
+        data-dependent amount, and roll the cache length — and, paged,
+        the page reservation — back over the rejected tail.  Rollback
+        is pure length bookkeeping: rejected-position KV is garbage the
+        attention mask already hides and later writes overwrite."""
+        u, n_emit, done = (np.asarray(vals[0]), np.asarray(vals[1]),
+                           np.asarray(vals[2]))
+        snapshot, k, tier = pending[4], pending[5], pending[6]
+        accepted = 0
+        for row, req in snapshot:
+            if req.done_s:
+                continue
+            try:
+                if self.faults is not None:
+                    self.faults.check_harvest(req.rid)
+                n = int(n_emit[row])
+                toks = [int(t) for t in u[row, :n]]
+                if toks and req.output and req.output[-1] == -100:
+                    req.output[-1] = toks[0]       # sentinel: first token
+                    req.output.extend(toks[1:])
+                else:
+                    req.output.extend(toks)
+                if toks and not req.first_token_s:
+                    req.first_token_s = now
+                self._gen[row] += n
+                self.cache.lengths[row] += n
+                if n < k + 1:
+                    self._stats["spec_rollbacks"] += 1
+                    self.cache.rollback(row, int(self.cache.lengths[row]))
+                self._stats["decode_tokens"] += n
+                accepted += max(0, n - 1)
+                if done[row]:
+                    self._finish(req, now)
+                elif self._deadline_blown(req, now):
+                    self._fail_deadline(req, now)
+            except Exception as e:                  # noqa: BLE001
+                self._fail_request(req, f"harvest failed: {e}")
+        self._stats["spec_accepted"] += accepted
+        if self._observer is not None and snapshot:
+            try:
+                self._observer(
+                    phase="spec_decode", arch=self.model.cfg.name,
+                    local_batch=tier, seq_len=k,
+                    seconds=now - self._spec_t0,
+                    stats={"draft_k": k, "accepted": accepted,
+                           "acceptance_rate":
+                               accepted / max(1, k * len(snapshot))})
+            except Exception:                       # noqa: BLE001
+                self._observer = None
 
     # -- cache key mapping --------------------------------------------------
     def _cache_keys(self):

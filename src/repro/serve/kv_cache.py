@@ -255,6 +255,15 @@ class KVCacheManager:
         a full ``s_max`` slice up front, so this never fails."""
         return True
 
+    def rollback(self, row: int, new_len: int) -> int:
+        """Release storage beyond ``new_len`` tokens (speculative-decode
+        rejection).  The engine's length mirror is the source of truth
+        for *logical* occupancy — attention masks positions >= cache_len
+        — so on the dense backend rollback is purely that host-side
+        length decrement and this is a no-op.  Returns pages freed (0
+        here; the paged backend returns real counts)."""
+        return 0
+
     def token_capacity(self) -> int:
         return self.max_batch * self.s_max
 
@@ -357,6 +366,24 @@ class PagedKVCacheManager(KVCacheManager):
         self.peak_pages_used = max(self.peak_pages_used, self.pages_used())
         return True
 
+    def rollback(self, row: int, new_len: int) -> int:
+        """Free the pages reserved past ``new_len`` tokens — the
+        regrowth a verify step reserved for draft positions the target
+        model rejected.  Freed pages held only rejected-draft garbage,
+        so returning them to the pool is safe regardless of what a
+        later owner writes.  Returns the number of pages freed."""
+        if row not in self.row_owner:
+            raise CacheRowError(
+                f"rollback on row {row} which is not allocated")
+        need = self.pages_needed(new_len)
+        cur = int(self.blocks_used[row])
+        for blk in range(need, cur):
+            heapq.heappush(self.free_pages, int(self.page_table[row, blk]))
+            self.page_table[row, blk] = 0
+        if need < cur:
+            self.blocks_used[row] = need
+        return max(0, cur - need)
+
     def release(self, row: int):
         if row not in self.row_owner:
             raise CacheRowError(
@@ -455,6 +482,51 @@ class PagedKVCacheManager(KVCacheManager):
                 new[k] = pool.at[phys].set(slab)
         return new
 
+    def scatter_span(self, caches: dict, out: dict, page_tab,
+                     cache_len, tier: int, width: int) -> dict:
+        """Write back every block a width-``width`` verify step may
+        have touched: positions ``[cache_len, cache_len + width)`` per
+        row — the multi-block generalization of
+        :meth:`scatter_frontier` (which is the ``width == 1`` case).
+        Whole blocks are written; positions of a block outside the
+        step's window carry the values the gather read, so rewriting
+        them is a no-op.  Blocks past the row's mapped range (or past
+        ``blocks_per_row``) land in the trash page."""
+        ps = self.page_size
+        nb = min(self.blocks_per_row, (width + ps - 2) // ps + 1)
+        pt = lax.slice_in_dim(page_tab, 0, tier, axis=0)
+        clen = lax.slice_in_dim(cache_len, 0, tier, axis=0)
+        blk = clen[:, None] // ps \
+            + jnp.arange(nb, dtype=clen.dtype)[None]           # (t, nb)
+        in_range = blk < self.blocks_per_row
+        safe_blk = jnp.minimum(blk, self.blocks_per_row - 1)
+        phys = jnp.take_along_axis(pt, safe_blk, axis=1)
+        phys = jnp.where(in_range, phys, 0).reshape(-1)        # (t*nb,)
+        idx = (safe_blk[..., None] * ps
+               + jnp.arange(ps, dtype=blk.dtype)).reshape(
+                   tier, nb * ps)                              # (t, nb*ps)
+        new = {}
+        for k, pool in caches.items():
+            o = out[k].astype(pool.dtype)
+            if self.batch_dims[k]:              # o: (L, t, s_max, ...)
+                ix = idx.reshape((1,) + idx.shape + (1,) * (o.ndim - 3))
+                slab = jnp.take_along_axis(
+                    o, jnp.broadcast_to(
+                        ix, o.shape[:2] + (nb * ps,) + o.shape[3:]),
+                    axis=2)
+                slab = slab.reshape(o.shape[0], tier * nb, ps,
+                                    *o.shape[3:])
+                new[k] = pool.at[:, phys].set(slab)
+            else:                               # o: (t, s_max, ...)
+                ix = idx.reshape(idx.shape + (1,) * (o.ndim - 2))
+                slab = jnp.take_along_axis(
+                    o, jnp.broadcast_to(
+                        ix, o.shape[:1] + (nb * ps,) + o.shape[2:]),
+                    axis=1)
+                slab = slab.reshape(tier * nb, ps, *o.shape[2:])
+                new[k] = pool.at[phys].set(slab)
+        return new
+
     def scatter_row_pages(self, caches: dict, out: dict, page_row,
                           first_block, n_blocks: int, seq_off,
                           seq_len: int) -> dict:
@@ -483,13 +555,22 @@ class PagedKVCacheManager(KVCacheManager):
     def gather_row(self, caches: dict, page_row) -> dict:
         """Gather one (dynamically indexed) row into its contiguous
         ``(1, s_max, ...)`` view, for the chunked-prefill step."""
+        return self.gather_row_batch(caches, page_row.reshape(1, -1))
+
+    def gather_row_batch(self, caches: dict, page_rows) -> dict:
+        """Gather ``bc`` (dynamically indexed) rows into their
+        contiguous ``(bc, s_max, ...)`` views — the batched
+        chunked-prefill step's gather.  ``page_rows`` is the slots'
+        page-table rows, ``(bc, blocks_per_row)``."""
+        bc = page_rows.shape[0]
+        flat = page_rows.reshape(-1)
         out = {}
         for k, pool in caches.items():
             if self.batch_dims[k]:
-                g = jnp.take(pool, page_row, axis=1)
-                out[k] = g.reshape(pool.shape[0], 1, self.s_max,
+                g = jnp.take(pool, flat, axis=1)
+                out[k] = g.reshape(pool.shape[0], bc, self.s_max,
                                    *pool.shape[3:])
             else:
-                g = jnp.take(pool, page_row, axis=0)
-                out[k] = g.reshape(1, self.s_max, *pool.shape[2:])
+                g = jnp.take(pool, flat, axis=0)
+                out[k] = g.reshape(bc, self.s_max, *pool.shape[2:])
         return out

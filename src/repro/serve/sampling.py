@@ -1,0 +1,142 @@
+"""Jitted on-device sampling for the serve engine.
+
+Until PR 9 the captured decode/prefill steps ended in a hardcoded
+``jnp.argmax`` — greedy was the only policy that never left the device.
+This module supplies the general policy as a pure jittable function so
+temperature / top-k / top-p sampling stays inside the captured step
+(zero extra host syncs) and so speculative verification can sample all
+k+1 positions of a draft window in one call.
+
+Determinism contract
+--------------------
+Every sampled token is drawn with a PRNG key derived *only* from
+``(seed, rid, position)`` — the request seed, the request id, and the
+absolute stream position of the token being emitted::
+
+    key = fold_in(fold_in(PRNGKey(seed), rid), position)
+
+No batch index, tier, iteration count or wall clock enters the key, so
+a sampled run is bitwise reproducible across batch compositions, across
+preemption-resume (the re-prefill re-derives the same positions), and
+across process restarts.  It is also what makes speculative decoding
+*lossless* under sampling: the verify step re-samples position ``p``
+with the same key the plain decode path would have used, so accepted
+tokens are exactly the tokens plain decode would have produced.
+
+``seed``/``rid``/``position`` are runtime arguments of the captured
+step — they never salt a PlanStore key (asserted by the determinism
+tests).  Only the *policy* (temperature/top-k/top-p, static under jit)
+salts the executable cache, via :func:`sampling_salt`.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class SamplingConfig:
+    """On-device sampling policy.
+
+    ``temperature == 0`` selects greedy argmax (the exact pre-PR-9
+    compiled graph — bitwise identical tokens).  ``top_k == 0`` and
+    ``top_p == 1.0`` disable the respective filters.
+    """
+
+    temperature: float = 0.0
+    top_k: int = 0
+    top_p: float = 1.0
+
+    def __post_init__(self):
+        if self.temperature < 0.0:
+            raise ValueError("SamplingConfig: temperature must be >= 0")
+        if self.top_k < 0:
+            raise ValueError("SamplingConfig: top_k must be >= 0")
+        if not (0.0 < self.top_p <= 1.0):
+            raise ValueError("SamplingConfig: top_p must be in (0, 1]")
+
+    @property
+    def greedy(self) -> bool:
+        return self.temperature == 0.0
+
+    def identity(self) -> tuple:
+        if self.greedy:
+            return ("sampling", "greedy")
+        return ("sampling", float(self.temperature), int(self.top_k),
+                float(self.top_p))
+
+
+GREEDY = SamplingConfig()
+
+
+def resolve_sampling(cfg: Optional[SamplingConfig]) -> SamplingConfig:
+    """``None`` means greedy — the historical engine default."""
+    return GREEDY if cfg is None else cfg
+
+
+def sampling_salt(cfg: Optional[SamplingConfig]) -> str:
+    """Printable policy identity for executable-cache keys.  The policy
+    is baked into the captured step closure, so two policies must never
+    share an executable; seeds/rids/positions are runtime args and do
+    NOT appear here."""
+    cfg = resolve_sampling(cfg)
+    if cfg.greedy:
+        return "greedy"
+    return f"t{cfg.temperature:g}k{cfg.top_k}p{cfg.top_p:g}"
+
+
+def row_keys(seeds, rids, positions):
+    """Per-element PRNG keys from the (seed, rid, position) fold chain.
+    All args must share one flat shape."""
+    def one(seed, rid, pos):
+        key = jax.random.PRNGKey(seed)
+        key = jax.random.fold_in(key, rid)
+        return jax.random.fold_in(key, pos)
+    return jax.vmap(one)(seeds, rids, positions)
+
+
+def _filter_logits(logits, cfg: SamplingConfig):
+    """Temperature + top-k + top-p filters over (N, V) f32 logits."""
+    scaled = logits / jnp.asarray(cfg.temperature, logits.dtype)
+    vocab = scaled.shape[-1]
+    if cfg.top_k and cfg.top_k < vocab:
+        kth = jnp.sort(scaled, axis=-1)[:, vocab - cfg.top_k][:, None]
+        scaled = jnp.where(scaled < kth, -jnp.inf, scaled)
+    if cfg.top_p < 1.0:
+        desc = jnp.sort(scaled, axis=-1)[:, ::-1]
+        probs = jax.nn.softmax(desc, axis=-1)
+        cum = jnp.cumsum(probs, axis=-1)
+        # keep a token while the cumulative mass *before* it is < top_p,
+        # which always keeps the most-likely token
+        keep = (cum - probs) < cfg.top_p
+        floor = jnp.min(jnp.where(keep, desc, jnp.inf), axis=-1,
+                        keepdims=True)
+        scaled = jnp.where(scaled < floor, -jnp.inf, scaled)
+    return scaled
+
+
+def sample_tokens(logits, cfg: Optional[SamplingConfig], *, seeds, rids,
+                  positions):
+    """Sample int32 token ids from ``logits`` (..., V).
+
+    ``seeds``/``rids``/``positions`` broadcast against the leading dims
+    of ``logits``.  Greedy policy compiles to a pure argmax — the same
+    graph the engine captured before sampling existed.
+    """
+    cfg = resolve_sampling(cfg)
+    if cfg.greedy:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    lead = logits.shape[:-1]
+    vocab = logits.shape[-1]
+    flat = logits.reshape((-1, vocab)).astype(jnp.float32)
+    seeds = jnp.broadcast_to(jnp.asarray(seeds, jnp.uint32), lead).reshape(-1)
+    rids = jnp.broadcast_to(jnp.asarray(rids, jnp.int32), lead).reshape(-1)
+    pos = jnp.broadcast_to(jnp.asarray(positions, jnp.int32),
+                           lead).reshape(-1)
+    filt = _filter_logits(flat, cfg)
+    keys = row_keys(seeds, rids, pos)
+    toks = jax.vmap(jax.random.categorical)(keys, filt)
+    return toks.reshape(lead).astype(jnp.int32)

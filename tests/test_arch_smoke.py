@@ -107,7 +107,11 @@ def test_prefill_and_decode_smoke(arch):
                 batch[k] = jnp.zeros(sds.shape, sds.dtype)
         out = fwd(params, batch)
         logits = out["logits"]
-        assert logits.shape[0] == B and logits.shape[1] == 1
+        # prefill collapses to the last position; decode keeps every
+        # input position so speculative verify can consume all k+1
+        # logits (whisper's decode is fixed at width 1)
+        want_s = 1 if phase == "prefill" else batch["ids"].shape[1]
+        assert logits.shape[0] == B and logits.shape[1] == want_s
         assert not bool(jnp.any(jnp.isnan(logits.astype(jnp.float32))))
 
 

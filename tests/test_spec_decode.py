@@ -1,0 +1,442 @@
+"""Speculative multi-token decode + jitted on-device sampling tests.
+
+The contract under test (PR 9 acceptance criteria):
+
+  * speculative greedy decode is bitwise identical to plain greedy
+    decode for every (proposer, k, backend) combination — acceptance /
+    rollback is lossless, including across preemption-resume and a
+    PlanStore warm restart with zero ``lower()`` calls on verify
+    buckets;
+  * sampled runs are reproducible from ``(seed, rid, position)`` alone:
+    batch composition, tier, and restarts don't change the tokens, and
+    speculative sampled decode equals plain sampled decode bitwise;
+  * seeds are runtime arguments — they never salt an executable key;
+  * paged rollback under injected allocation denials falls back to
+    plain decode for the iteration and leaks nothing;
+  * chunked prefill packs same-width chunk slabs from different
+    requests into one bucketed call;
+  * ``SpecConfig(k="auto")`` consults ``AutoPolicy.spec_draft_k``,
+    which explores the registered ``spec_decode`` candidates and then
+    exploits measured acceptance, persisting its scoreboard.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.core import PlanStore
+from repro.core.autotune import AutoPolicy
+from repro.core.strategies import get_strategy
+from repro.core.strategies.registry import get_entry
+from repro.models.layers import MeshInfo
+from repro.models.registry import build_model
+from repro.serve import (
+    FaultInjector,
+    NGramProposer,
+    PagedCache,
+    Request,
+    SamplingConfig,
+    ServeConfig,
+    ServeEngine,
+    SpecConfig,
+)
+from repro.serve.sampling import GREEDY, sample_tokens, sampling_salt
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = get_smoke_config("chatglm3-6b")
+    model = build_model(cfg, MeshInfo(tp=1, dp=1))
+    segs, _ = model.build_segments("prefill", 1, 32, s_max=64)
+    params = model._init_from_segments(segs, jax.random.PRNGKey(0))
+    # one shared store: every engine below replays the same lowered
+    # plans and compiled steps instead of re-jitting per test
+    return cfg, model, params, PlanStore(exec_capacity=256)
+
+
+def make_engine(setup, scheduler="sequential", store=None, **kw):
+    _, model, params, shared = setup
+    kw.setdefault("max_batch", 4)
+    kw.setdefault("s_max", 64)
+    kw.setdefault("prefill_buckets", (16, 32))
+    sched = get_strategy(scheduler) if isinstance(scheduler, str) \
+        else scheduler
+    return ServeEngine(model, params, sched, ServeConfig(**kw),
+                       plan_store=shared if store is None else store)
+
+
+def prompts_for(n, seed=0, lo=4, hi=14):
+    rng = np.random.default_rng(seed)
+    return [rng.integers(0, 100, int(rng.integers(lo, hi)))
+            .astype(np.int32) for _ in range(n)]
+
+
+def run_outputs(eng, reqs):
+    for r in reqs:
+        eng.submit(r)
+    done = eng.run()
+    assert all(r.ok for r in done), [r.result for r in done if not r.ok]
+    return {r.rid: list(r.output) for r in done}
+
+
+def trace(n=4, seed=3, max_new=10, stagger=True, **req_kw):
+    """Staggered max_new so rows finish at different times and the
+    engine walks down through the decode tiers mid-run."""
+    reqs = []
+    for i, pr in enumerate(prompts_for(n, seed=seed)):
+        mn = max_new + (2 * i if stagger else 0)
+        reqs.append(Request(rid=i, prompt=pr.copy(), max_new_tokens=mn,
+                            **req_kw))
+    return reqs
+
+
+# -- sampling unit tests -----------------------------------------------------
+
+def test_greedy_sample_tokens_is_argmax():
+    logits = jnp.asarray(np.random.default_rng(0).standard_normal((4, 7, 50)),
+                         jnp.float32)
+    toks = sample_tokens(logits, GREEDY, seeds=jnp.zeros((4, 1), jnp.uint32),
+                         rids=jnp.zeros((4, 1), jnp.int32),
+                         positions=jnp.zeros((4, 7), jnp.int32))
+    np.testing.assert_array_equal(np.asarray(toks),
+                                  np.argmax(np.asarray(logits), axis=-1))
+    # None resolves to greedy (the historical engine default)
+    toks2 = sample_tokens(logits, None, seeds=0, rids=0, positions=0)
+    np.testing.assert_array_equal(np.asarray(toks), np.asarray(toks2))
+
+
+def test_sampled_tokens_depend_only_on_seed_rid_position():
+    """The determinism contract: batch composition doesn't matter, only
+    the (seed, rid, position) triple each element carries."""
+    cfg = SamplingConfig(temperature=0.7, top_k=30)
+    rng = np.random.default_rng(1)
+    logits = jnp.asarray(rng.standard_normal((4, 200)), jnp.float32)
+    seeds = jnp.asarray([1, 1, 2, 2], jnp.uint32)
+    rids = jnp.asarray([0, 1, 0, 1], jnp.int32)
+    pos = jnp.asarray([5, 5, 9, 9], jnp.int32)
+    full = np.asarray(sample_tokens(logits, cfg, seeds=seeds, rids=rids,
+                                    positions=pos))
+    # permuted batch: same per-element triples -> same tokens
+    perm = np.asarray([2, 0, 3, 1])
+    shuf = np.asarray(sample_tokens(logits[perm], cfg, seeds=seeds[perm],
+                                    rids=rids[perm], positions=pos[perm]))
+    np.testing.assert_array_equal(full[perm], shuf)
+    # each row sampled alone equals the row inside the batch
+    for i in range(4):
+        solo = sample_tokens(logits[i:i + 1], cfg, seeds=seeds[i:i + 1],
+                             rids=rids[i:i + 1], positions=pos[i:i + 1])
+        assert int(np.asarray(solo)[0]) == int(full[i])
+    # the position must enter the key: across many positions at least
+    # one draw differs from the position-5 draw
+    many = np.asarray(sample_tokens(
+        jnp.broadcast_to(logits[0], (16, 200)), cfg,
+        seeds=jnp.full((16,), 1, jnp.uint32),
+        rids=jnp.zeros((16,), jnp.int32),
+        positions=jnp.arange(16, dtype=jnp.int32)))
+    assert len(set(many.tolist())) > 1
+
+
+def test_sampling_salt_and_validation():
+    assert sampling_salt(None) == "greedy"
+    assert sampling_salt(GREEDY) == "greedy"
+    assert sampling_salt(SamplingConfig(temperature=0.8, top_k=20,
+                                        top_p=0.9)) == "t0.8k20p0.9"
+    with pytest.raises(ValueError):
+        SamplingConfig(temperature=-1.0)
+    with pytest.raises(ValueError):
+        SamplingConfig(top_p=0.0)
+    with pytest.raises(ValueError):
+        SpecConfig(k=0)
+    with pytest.raises(ValueError):
+        SpecConfig(proposer="nope")
+    SpecConfig(k="auto")                       # valid
+
+
+def test_ngram_proposer_drafts_continuations():
+    prop = NGramProposer()
+    # trailing 3-gram [1,2,3] occurred at 0; continuation is [4,1,2]
+    d = prop.draft([[1, 2, 3, 4, 1, 2, 3]], 3)
+    np.testing.assert_array_equal(d, [[4, 1, 2]])
+    # no earlier occurrence: repeat the last token
+    d = prop.draft([[5]], 4)
+    np.testing.assert_array_equal(d, [[5, 5, 5, 5]])
+    # short continuation pads with its own last token
+    d = prop.draft([[7, 8, 7, 8]], 4)
+    assert d.shape == (1, 4)
+
+
+# -- bitwise spec-greedy == plain-greedy -------------------------------------
+
+@pytest.fixture(scope="module")
+def plain_greedy(setup):
+    """Plain greedy outputs for the standard trace, per backend."""
+    out = {}
+    for cache in ("dense", "paged"):
+        eng = make_engine(setup, cache=_backend(cache))
+        out[cache] = run_outputs(eng, trace())
+    assert out["dense"] == out["paged"]
+    return out
+
+
+def _backend(cache):
+    return PagedCache(page_size=16) if cache == "paged" else None
+
+
+@pytest.mark.parametrize("cache", ("dense", "paged"))
+@pytest.mark.parametrize("proposer,k", [("ngram", 2), ("ngram", 4),
+                                        ("self", 2), ("self", 4)])
+def test_spec_greedy_bitwise_equals_plain(setup, plain_greedy, proposer, k,
+                                          cache):
+    eng = make_engine(setup, cache=_backend(cache),
+                      spec=SpecConfig(proposer=proposer, k=k))
+    got = run_outputs(eng, trace())
+    assert got == plain_greedy[cache]
+    st = eng.stats
+    assert st["spec_steps"] > 0
+    assert len(st["tier_steps"]) > 1           # staggered trace: tiers moved
+
+
+def test_spec_greedy_with_eos_mid_draft(setup, plain_greedy):
+    """An eos token accepted inside a draft window must cut the stream
+    exactly where plain decode would have stopped."""
+    # pick an eos that plain greedy emits mid-output for some request
+    eos, rid = None, None
+    for r, out in plain_greedy["dense"].items():
+        if len(out) > 3:
+            eos, rid = out[2], r
+            break
+    assert eos is not None
+    plain = make_engine(setup)
+    want = run_outputs(plain, trace(eos_id=eos))
+    spec = make_engine(setup, spec=SpecConfig(proposer="ngram", k=4))
+    got = run_outputs(spec, trace(eos_id=eos))
+    assert got == want
+    assert len(want[rid]) <= len(plain_greedy["dense"][rid])
+
+
+def test_spec_survives_preemption_resume(setup):
+    """Preempt-and-requeue under a memory-pressure window: the resumed
+    speculative rows still match an uninterrupted plain run bitwise."""
+    plain = make_engine(setup)
+    want = run_outputs(plain, trace(seed=14, stagger=False, max_new=6))
+
+    faults = FaultInjector(pressure=((2, 5, 3),))   # capacity 4 -> 1
+    eng = make_engine(setup, faults=faults,
+                      spec=SpecConfig(proposer="ngram", k=2))
+    got = run_outputs(eng, trace(seed=14, stagger=False, max_new=6))
+    assert got == want
+    assert eng.stats["preempted"] >= 1
+
+
+# -- sampled determinism -----------------------------------------------------
+
+SAMPLED = SamplingConfig(temperature=0.8, top_k=20)
+
+
+def test_sampled_runs_reproducible_across_batches_and_restart(setup):
+    """Fixed (seed, rid, position) triples pin every sampled token: the
+    same requests produce the same streams whether submitted together,
+    in waves, or into a freshly built engine."""
+    def reqs():
+        return [Request(rid=i, prompt=pr.copy(), max_new_tokens=8,
+                        seed=100 + i)
+                for i, pr in enumerate(prompts_for(4, seed=5))]
+
+    eng = make_engine(setup, sampling=SAMPLED)
+    together = run_outputs(eng, reqs())
+    assert any(together[i] != together[j]
+               for i in together for j in together if i != j)
+
+    eng2 = make_engine(setup, sampling=SAMPLED)      # "restart"
+    waves = {}
+    rs = reqs()
+    waves.update(run_outputs(eng2, rs[:1]))          # different batch
+    waves.update(run_outputs(eng2, rs[1:]))          # compositions
+    assert waves == together
+
+
+def test_spec_sampled_equals_plain_sampled(setup):
+    """Speculative decode is lossless under sampling: the verify step
+    re-samples each position with the key plain decode would have used,
+    so the accepted stream is bitwise identical."""
+    def reqs():
+        return [Request(rid=i, prompt=pr.copy(), max_new_tokens=8,
+                        seed=7 * i)
+                for i, pr in enumerate(prompts_for(4, seed=6))]
+
+    plain = make_engine(setup, sampling=SAMPLED)
+    want = run_outputs(plain, reqs())
+    spec = make_engine(setup, sampling=SAMPLED,
+                      spec=SpecConfig(proposer="ngram", k=3))
+    got = run_outputs(spec, reqs())
+    assert got == want
+
+
+def test_engine_seed_default_and_request_override(setup):
+    """Request(seed=) overrides ServeConfig(seed=); an explicit request
+    seed equal to the engine seed is indistinguishable from relying on
+    the default."""
+    pr = prompts_for(1, seed=8)[0]
+
+    def run_one(engine_seed, req_seed):
+        eng = make_engine(setup, sampling=SAMPLED, seed=engine_seed)
+        return run_outputs(eng, [Request(rid=0, prompt=pr.copy(),
+                                         max_new_tokens=6,
+                                         seed=req_seed)])[0]
+
+    assert run_one(11, None) == run_one(0, 11) == run_one(11, 11)
+    assert run_one(11, None) != run_one(12, None)
+
+
+def test_seed_never_salts_executable_keys(setup):
+    """Seeds are runtime args: engines differing only in seed must
+    produce identical executable-cache key sets."""
+    keys = []
+    for seed in (0, 123):
+        store = PlanStore()
+        eng = make_engine(setup, store=store, sampling=SAMPLED, seed=seed,
+                          spec=SpecConfig(proposer="ngram", k=2))
+        eng.warmup()
+        run_outputs(eng, [Request(rid=0, prompt=prompts_for(1)[0],
+                                  max_new_tokens=4, seed=seed)])
+        keys.append(sorted(map(repr, store._execs.keys())))
+    assert keys[0] == keys[1]
+    assert any("spec_verify" in k for k in keys[0])
+
+
+# -- warm restart ------------------------------------------------------------
+
+def test_spec_warm_restart_zero_lowers_on_verify_buckets(setup, tmp_path,
+                                                         monkeypatch):
+    """A restarted engine must restore/specialize every verify bucket
+    from the persisted store — never a cold ``lower()``."""
+    path = str(tmp_path / "spec.dfps")
+    spec_cfg = SpecConfig(proposer="ngram", k=4)
+    store = PlanStore(path=path)
+    eng = make_engine(setup, store=store, spec=spec_cfg)
+    eng.warmup()
+    run_outputs(eng, trace(seed=9))
+    assert store.save() >= 1
+
+    from repro.core import plan_store as plan_store_mod
+
+    def bomb(*a, **k):
+        raise AssertionError("warm restart re-lowered a verify bucket")
+    monkeypatch.setattr(plan_store_mod, "lower", bomb)
+    store2 = PlanStore.open(path)
+    eng2 = make_engine(setup, store=store2, spec=spec_cfg)
+    eng2.warmup()                                  # would bomb on lower
+    builds = eng2.stats["spec_builds"]
+    assert builds and all(b["misses"] == 0 for b in builds.values()), builds
+    assert sum(b["shares"] + b["restore_hits"]
+               for b in builds.values()) > 0, builds
+    # and the restarted engine actually serves traffic on those plans
+    got = run_outputs(eng2, trace(seed=9))
+    plain = make_engine(setup)
+    assert got == run_outputs(plain, trace(seed=9))
+
+
+# -- paged rollback under faults ---------------------------------------------
+
+def test_paged_rollback_under_alloc_denial(setup):
+    """Mid-run allocation denials make the verify reservation fail: the
+    engine falls back to plain decode for that iteration, stays bitwise
+    correct, and frees every page at the end."""
+    plain = make_engine(setup, cache=_backend("paged"))
+    want = run_outputs(plain, trace(seed=10, max_new=12))
+
+    faults = FaultInjector(alloc_fail=(4, 5, 6, 7))
+    eng = make_engine(setup, cache=_backend("paged"), faults=faults,
+                      spec=SpecConfig(proposer="ngram", k=4))
+    got = run_outputs(eng, trace(seed=10, max_new=12))
+    assert got == want
+    st = eng.stats
+    assert st["spec_fallbacks"] >= 1, st
+    assert st["spec_steps"] > 0, st
+    assert int(eng.cache.blocks_used.sum()) == 0      # no page leak
+    assert eng.cache.row_owner == {}
+
+
+# -- batched chunked prefill -------------------------------------------------
+
+def test_chunked_prefill_packs_same_width_slabs(setup):
+    """Two chunked prompts admitted together ride one bucketed chunk
+    call per step (a real batch dimension), and the outputs match the
+    one-at-a-time path bitwise."""
+    rng = np.random.default_rng(20)
+    prompts = [rng.integers(0, 100, 40).astype(np.int32) for _ in range(2)]
+
+    def reqs():
+        return [Request(rid=i, prompt=p.copy(), max_new_tokens=6)
+                for i, p in enumerate(prompts)]
+
+    solo = make_engine(setup, prefill_batch=1)
+    want = run_outputs(solo, reqs())
+    packed = make_engine(setup)
+    got = run_outputs(packed, reqs())
+    assert got == want
+    chunk_calls = [e for e in packed.dispatch_log if e[0] == "chunk"]
+    assert any(len(e[1]) > 1 for e in chunk_calls), packed.dispatch_log
+    assert packed.stats["chunk_steps"] < solo.stats["chunk_steps"]
+
+
+# -- draft-k autotuning ------------------------------------------------------
+
+def test_spec_decode_registry_param_space():
+    entry = get_entry("spec_decode")
+    assert dict(entry.param_space)["draft_k"] == (2, 4, 8)
+    assert not entry.tunable            # not a scheduler candidate
+    entry.factory(draft_k=4)            # knob carrier builds a scheduler
+
+
+def test_auto_policy_spec_draft_k_explore_then_exploit():
+    policy = AutoPolicy()
+    store = PlanStore()
+    policy.bind_store(store)
+    arch, cands = "toy-arch", (2, 4, 8)
+    # exploration: untried candidates first, in order
+    seen = []
+    for _ in cands:
+        k = policy.spec_draft_k(arch=arch, candidates=cands)
+        seen.append(k)
+        policy.observe(phase="spec_decode", arch=arch, local_batch=4,
+                       seq_len=k, seconds=0.01,
+                       stats={"draft_k": k,
+                              "acceptance_rate": 0.9 if k == 4 else 0.1})
+    assert seen == [2, 4, 8]
+    # exploitation: k=4 has by far the best accepted-tokens/s
+    assert policy.spec_draft_k(arch=arch, candidates=cands) == 4
+    # the scoreboard persisted; a fresh policy on the same store resumes
+    fresh = AutoPolicy()
+    fresh.bind_store(store)
+    assert fresh.spec_draft_k(arch=arch, candidates=cands) == 4
+
+
+def test_spec_auto_k_engine_stays_bitwise_greedy(setup, plain_greedy):
+    """k='auto' with the auto policy: whatever k the picker explores,
+    greedy outputs never change."""
+    eng = make_engine(setup, scheduler=get_strategy("auto"),
+                      spec=SpecConfig(proposer="ngram", k="auto"))
+    got = run_outputs(eng, trace())
+    assert got == plain_greedy["dense"]
+    assert eng.stats["spec_steps"] > 0
+
+
+# -- guard rails -------------------------------------------------------------
+
+def test_spec_rejects_recurrent_state_models():
+    cfg = get_smoke_config("mamba2-2.7b")
+    model = build_model(cfg, MeshInfo(tp=1, dp=1))
+    segs, _ = model.build_segments("prefill", 1, 32, s_max=64)
+    params = model._init_from_segments(segs, jax.random.PRNGKey(0))
+    with pytest.raises(ValueError, match="positional"):
+        ServeEngine(model, params, get_strategy("sequential"),
+                    ServeConfig(max_batch=2, s_max=64,
+                                prefill_buckets=(32,),
+                                spec=SpecConfig(proposer="ngram", k=2)))
+
+
+def test_spec_k_must_fit_smallest_bucket(setup):
+    with pytest.raises(ValueError, match="verify width"):
+        make_engine(setup, spec=SpecConfig(proposer="ngram", k=16))
