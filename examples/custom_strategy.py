@@ -93,6 +93,27 @@ def main():
                  / results["mine"].t_overlapped)
         print(f"MyDBO modeled speedup vs sequential: {speed:.3f}x")
 
+    # ---- static verification: catch schedule bugs before any TPU -------
+    # The verifier replays the plan's data flow and reports *every*
+    # violation as a typed diagnostic (repro.core.verify.CODES) instead
+    # of an opaque first-error crash.  A clean MyDBO plan:
+    from repro.core import ExecutionPlan, verify
+    g = partition(seg.graph, MyDBO().partition_rules(), default_depth=2)
+    info = ScheduleContext(local_batch=8, seq_len=2048, phase="prefill",
+                           arch=cfg.name)
+    plan = record_plan(g, MyDBO(), info)
+    report = verify(g, plan, lint=True)
+    assert report.ok
+    print(f"\nMyDBO plan verified: {report.pretty()}")
+    # ...and the same plan with one step dropped — every downstream
+    # consequence reported with op + micro-batch provenance:
+    broken = ExecutionPlan(plan.steps[:-1], plan.split_sizes,
+                           plan.graph_fingerprint)
+    bad = verify(g, broken)
+    assert not bad.ok
+    print(f"one step dropped -> {len(bad.errors)} typed diagnostic(s), "
+          f"e.g.\n  {bad.errors[0]}")
+
     # ---- context-conditional selection: MyDBO as a StrategyPolicy ------
     # 8 lines turn the scheduler into a policy: large MoE prefill buckets
     # get MyDBO, small ones SBO, decode always sequential.  The policy

@@ -100,7 +100,7 @@ class CompiledStep:
 def compile(model, policy=None, mesh=None, plan_store=None,
             plan_store_path: Optional[str] = None, example_inputs=None,
             smoke: bool = False, cache=None,
-            mesh_info=None) -> "Program":
+            mesh_info=None, verify: str = "warn") -> "Program":
     """Build a :class:`Program` — the single frontend entry point.
 
     ``model``   — an arch name (``"chatglm3-6b"``), an ``ArchConfig``, a
@@ -132,6 +132,12 @@ def compile(model, policy=None, mesh=None, plan_store=None,
                   ``mesh`` is a ``jax.sharding.Mesh`` whose derived
                   defaults (fsdp, attn impl) are not what you want — the
                   dryrun launcher's path.
+    ``verify``  — static plan verification (``core.verify``) applied to
+                  every plan the program records or redeems from the
+                  store: ``"strict"`` raises ``PlanVerificationError``
+                  on error-severity diagnostics, ``"warn"`` (default)
+                  emits a Python warning, ``"off"`` skips.  All modes
+                  except ``"off"`` feed ``Program.verify()``.
     """
     from .models.layers import MeshInfo
 
@@ -159,9 +165,11 @@ def compile(model, policy=None, mesh=None, plan_store=None,
                 "compile(Module, ...) needs example_inputs= "
                 "(name -> ShapeDtypeStruct) to trace the graph")
         graph = trace(model, dict(example_inputs))
-        return Program(graph=graph, policy=policy, store=store)
+        return Program(graph=graph, policy=policy, store=store,
+                       verify=verify)
     if isinstance(model, OpGraph):
-        return Program(graph=model, policy=policy, store=store)
+        return Program(graph=model, policy=policy, store=store,
+                       verify=verify)
 
     jax_mesh = mesh if _is_jax_mesh(mesh) else None
     if mesh_info is None:
@@ -180,7 +188,8 @@ def compile(model, policy=None, mesh=None, plan_store=None,
         from .models.registry import build_model
         model = build_model(model, mesh_info)
     return Program(model=model, policy=policy, store=store,
-                   mesh=jax_mesh, cache=cache, policy_spec=policy_spec)
+                   mesh=jax_mesh, cache=cache, policy_spec=policy_spec,
+                   verify=verify)
 
 
 def _is_jax_mesh(mesh) -> bool:
@@ -200,12 +209,15 @@ class Program:
 
     def __init__(self, model=None, graph: Optional[OpGraph] = None,
                  policy: StrategyPolicy = None, store: PlanStore = None,
-                 mesh=None, cache=None, policy_spec: Optional[str] = None):
+                 mesh=None, cache=None, policy_spec: Optional[str] = None,
+                 verify: str = "warn"):
         self.model = model
         self.graph = graph
         self.policy = policy
         self.store = store
         self.mesh = mesh
+        self.verify_mode = verify
+        self._verify_reports: list = []   # (label, VerifyReport)
         if cache is not None:
             from .serve.kv_cache import resolve_cache_backend
             cache = resolve_cache_backend(cache)
@@ -251,6 +263,24 @@ class Program:
             return table()
         return [{"policy": self.policy_spec or self.policy.name,
                  "salt": strategy_salt(self.policy)}]
+
+    def verify(self):
+        """Aggregated :class:`~repro.core.verify.VerifyReport` over every
+        plan this program has built so far (one verification per segment
+        per step builder, run at build time under the program's
+        ``verify`` mode).  Labels enter each diagnostic's provenance via
+        :meth:`verify_reports`; an empty report means either every plan
+        was clean or ``verify="off"`` suppressed collection."""
+        from .core.verify import VerifyReport
+        out = VerifyReport()
+        for _label, report in self._verify_reports:
+            out = out.merged(report)
+        return out
+
+    def verify_reports(self) -> list:
+        """The raw ``(label, VerifyReport)`` pairs behind
+        :meth:`verify` — one per (phase, segment) built."""
+        return list(self._verify_reports)
 
     # -- one-file deployment -----------------------------------------------
     def save(self, path: str) -> int:
@@ -400,6 +430,14 @@ class Program:
         ids = batch["ids"]
         return int(ids.shape[0]), int(ids.shape[1])
 
+    def _verify_args(self) -> dict:
+        """kwargs threading the program's verification mode + report sink
+        into ``build_forward`` (``verify="off"`` disables both)."""
+        if self.verify_mode == "off":
+            return {"verify": "off", "verify_sink": None}
+        return {"verify": self.verify_mode,
+                "verify_sink": self._verify_reports}
+
     def _require_lm(self, what: str):
         if self.model is None:
             raise TypeError(
@@ -451,7 +489,7 @@ class Program:
         info = self._context("train", global_batch, seq_len)
         fn, segs, binputs, init_opt = _build_train_step(
             self.model, self.policy, global_batch, seq_len, tcfg, info,
-            plan_store=self.store)
+            plan_store=self.store, **self._verify_args())
         self.checkpoint()
         return CompiledStep(fn=fn, segments=segs, batch_inputs=binputs,
                             init_opt=init_opt)
@@ -484,7 +522,8 @@ class Program:
         info = self._context("prefill", global_batch, seq_len)
         fwd = build_forward(segs, self.policy, info, lowered=True,
                             plan_cache=self.store,
-                            op_config=self.model.op_closure_config())
+                            op_config=self.model.op_closure_config(),
+                            **self._verify_args())
         self.checkpoint()
         return CompiledStep(fn=fwd, segments=segs, batch_inputs=binputs)
 
@@ -520,7 +559,8 @@ class Program:
             info = self._context("decode", tier, s_max)
             fwd = build_forward(segs, self.policy, info, lowered=True,
                                 plan_cache=self.store,
-                                op_config=self.model.op_closure_config())
+                                op_config=self.model.op_closure_config(),
+                                **self._verify_args())
             out[tier] = CompiledStep(fn=fwd, segments=segs,
                                      batch_inputs=binputs)
         self.checkpoint()
@@ -611,6 +651,13 @@ class Program:
         salt = f"graph|{info.phase}|{strategy_salt(self.policy)}"
         realizer = Realizer(g, plan, plan_cache=self.store,
                             plan_salt=salt)
+        if self.verify_mode != "off":
+            from .core.verify import enforce, verify as run_verify
+            report = run_verify(g, plan, lowered=realizer.lowered,
+                                lint=True)
+            self._verify_reports.append(
+                (f"graph/{info.phase}/b{info.local_batch}", report))
+            enforce(report, self.verify_mode, what="graph plan")
         self._graph_cache[key] = (g, realizer, plan)
         self.checkpoint()
         return self._graph_cache[key]

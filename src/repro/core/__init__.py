@@ -32,7 +32,10 @@ from .policy import (StrategyPolicy, as_policy, by_phase,
                      local_batch_below, phase_is, resolve_strategy,
                      tokens_of, when)
 from .scheduler import (OpSchedulerBase, SchedCtx, ScheduleContext,
-                        record_plan)
+                        ScheduleError, record_plan)
+from .verify import (CODES, Diagnostic, PlanVerificationError,
+                     VerifyReport, lint_plan, verify, verify_lowered,
+                     verify_plan)
 
 __all__ = [
     "FULL", "OpGraph", "OpNode", "TensorRef",
@@ -40,7 +43,10 @@ __all__ = [
     "Mark", "SplitEveryOp", "SplitFunc", "SplitModule", "partition",
     "ExecutionPlan", "OpHandle", "PlanStep", "graph_fingerprint",
     "structural_fingerprint", "FINGERPRINT_VERSION",
-    "OpSchedulerBase", "SchedCtx", "ScheduleContext", "record_plan",
+    "OpSchedulerBase", "SchedCtx", "ScheduleContext", "ScheduleError",
+    "record_plan",
+    "CODES", "Diagnostic", "PlanVerificationError", "VerifyReport",
+    "lint_plan", "verify", "verify_lowered", "verify_plan",
     "StrategyPolicy", "as_policy", "by_phase", "by_token_threshold",
     "first_viable", "when", "has_ops", "local_batch_below", "phase_is",
     "resolve_strategy", "tokens_of",

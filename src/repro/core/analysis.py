@@ -13,7 +13,9 @@ runtime uses (`resolve_read`), so the two can never disagree.
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
+from typing import Optional
 
 from .graph import FULL, OpGraph, TensorRef
 from .plan import ExecutionPlan, PlanStep
@@ -110,11 +112,20 @@ class AnalysisResult:
     buffer_bytes: int                  # total prealloc buffer footprint
     n_steps: int
     plan_fingerprint: str = ""         # fingerprint of the analyzed plan
+    # (tid, part) -> read count, built once; excluded from eq/repr so
+    # rehydrated/replaced results stay comparable without it.
+    _ref_counts: Optional[collections.Counter] = dataclasses.field(
+        default=None, repr=False, compare=False)
 
     def ref_count(self, key) -> int:
         """Paper Alg.1 line 4 equivalent (for tests/introspection)."""
-        return sum(1 for step_reads_ in self.reads
-                   for (t, p, m, k) in step_reads_ if (t, p) == key)
+        if self._ref_counts is None:
+            # lazy fallback for results built without the precomputed
+            # table (dataclasses.replace, decoded artifacts)
+            object.__setattr__(self, "_ref_counts", collections.Counter(
+                (t, p) for step_reads_ in self.reads
+                for (t, p, _m, _k) in step_reads_))
+        return self._ref_counts[key]
 
 
 def static_analysis(graph: OpGraph, plan: ExecutionPlan) -> AnalysisResult:
@@ -140,7 +151,7 @@ def static_analysis(graph: OpGraph, plan: ExecutionPlan) -> AnalysisResult:
             avail1.setdefault(t, set()).add(p)
     # outputs are consumed at FULL by the virtual final step
     final_reads = []
-    for name, t in graph.outputs.items():
+    for _name, t in graph.outputs.items():
         mode, key = resolve_read(avail1.get(t, set()), graph.tensors[t],
                                  FULL, nparts)
         if mode == "assemble":
@@ -151,7 +162,7 @@ def static_analysis(graph: OpGraph, plan: ExecutionPlan) -> AnalysisResult:
     # pass 2: death sites.  Key space: (tid, part) values and (tid, BUF).
     death: dict = {}
     for i, rs in enumerate(all_reads):
-        for (t, p, mode, key) in rs:
+        for (t, _p, mode, key) in rs:
             if mode == "direct":
                 death[(t, key)] = i
             elif mode == "slice":
@@ -167,6 +178,9 @@ def static_analysis(graph: OpGraph, plan: ExecutionPlan) -> AnalysisResult:
                 death.setdefault((t, BUF), i)
 
     buffer_bytes = sum(graph.tensors[t].nbytes for t in prealloc)
+    ref_counts = collections.Counter(
+        (t, p) for rs in all_reads for (t, p, _m, _k) in rs)
     return AnalysisResult(prealloc, death, all_reads, all_writes,
                           buffer_bytes, len(plan.steps),
-                          plan_fingerprint=plan.fingerprint())
+                          plan_fingerprint=plan.fingerprint(),
+                          _ref_counts=ref_counts)

@@ -82,6 +82,10 @@ class TuningVerdict:
     provenance: str                 # "model" | "measured"
     scores: tuple                   # ((label, t_model, peak_bytes), ...)
     measured_s: float = 0.0         # live/measured seconds (0 = none yet)
+    # candidates excluded from the scoreboard and why:
+    # ((label, code, message), ...) — code is a verify diagnostic code
+    # ("VFY003", ...) or an exception class name for record-time crashes
+    pruned: tuple = ()
     version: int = AUTOTUNE_VERSION
     arch: str = ""
     phase: str = ""
@@ -92,6 +96,8 @@ class TuningVerdict:
         d = dataclasses.asdict(self)
         d["params"] = [[k, v] for k, v in self.params]
         d["scores"] = [[label, t, mem] for label, t, mem in self.scores]
+        d["pruned"] = [[label, code, msg]
+                       for label, code, msg in self.pruned]
         return d
 
     @classmethod
@@ -107,6 +113,8 @@ class TuningVerdict:
         d["params"] = tuple((str(k), v) for k, v in d["params"])
         d["scores"] = tuple((str(label), float(t), int(mem))
                             for label, t, mem in d["scores"])
+        d["pruned"] = tuple((str(label), str(code), str(msg))
+                            for label, code, msg in d.get("pruned") or ())
         return cls(**{k: v for k, v in d.items()
                       if k in {f.name for f in dataclasses.fields(cls)}})
 
@@ -350,34 +358,38 @@ class AutoPolicy(StrategyPolicy):
         g = self._tuning_graph(graph)
         tp = int((info.mesh_shape or {}).get("tp") or self.tp)
         scored = []     # (label, name, params, plan, t, mem, t_seq)
+        pruned = []     # (label, code, message) — the verdict scoreboard
         for name, params in registry.tunable_candidates():
-            try:
-                sched = registry.make_scheduler(name, **params)
-                plan = record_plan(g, sched, info)
-                rep, mem = self._score(g, plan, tp)
-            except Exception:
-                continue    # candidate not viable on this graph/context
             label = name if not params else \
                 name + "(" + ",".join(f"{k}={v}"
                                       for k, v in sorted(params.items())) \
                 + ")"
-            scored.append((label, name, tuple(sorted(params.items())),
-                           plan, rep.t_overlapped, mem, rep.t_sequential))
-        ex = ExhaustiveOrder(self.exhaustive_max_ops,
-                             self.exhaustive_max_orders, tp,
-                             self.bw_scale, self.coll_latency_s)
+            cand = self._try_candidate(label, g, info, tp, pruned,
+                                       lambda: registry.make_scheduler(
+                                           name, **params))
+            if cand is not None:
+                plan, rep, mem = cand
+                scored.append((label, name, tuple(sorted(params.items())),
+                               plan, rep.t_overlapped, mem,
+                               rep.t_sequential))
         if len(g.nodes) <= self.exhaustive_max_ops:
-            try:
-                plan = record_plan(g, ex, info)
-                rep, mem = self._score(g, plan, tp)
+            cand = self._try_candidate(
+                "exhaustive", g, info, tp, pruned,
+                lambda: ExhaustiveOrder(self.exhaustive_max_ops,
+                                        self.exhaustive_max_orders, tp,
+                                        self.bw_scale,
+                                        self.coll_latency_s))
+            if cand is not None:
+                plan, rep, mem = cand
                 scored.append(("exhaustive", "exhaustive", (), plan,
                                rep.t_overlapped, mem, rep.t_sequential))
-            except Exception:
-                pass
         if not scored:
+            why = "; ".join(f"{lab}: [{code}] {msg}"
+                            for lab, code, msg in pruned[:4])
             raise RuntimeError(
                 f"autotuner found no viable candidate for context "
-                f"{info.arch}/{info.phase} (graph of {len(g.nodes)} units)")
+                f"{info.arch}/{info.phase} (graph of {len(g.nodes)} units)"
+                + (f"; pruned: {why}" if why else ""))
 
         provenance = "model"
         measured_s = 0.0
@@ -415,6 +427,7 @@ class AutoPolicy(StrategyPolicy):
             scores=tuple(points[i] for i in range(len(points))
                          if i in front or i < 4),
             measured_s=measured_s,
+            pruned=tuple(pruned),
             arch=info.arch, phase=info.phase,
             local_batch=int(info.local_batch), seq_len=int(info.seq_len))
         self._verdicts[fp] = v
@@ -422,6 +435,34 @@ class AutoPolicy(StrategyPolicy):
         if self._store is not None:
             self._store.put_verdict(fp, v.to_payload())
         return v
+
+    def _try_candidate(self, label: str, g: OpGraph,
+                       info: ScheduleContext, tp: int, pruned: list,
+                       make: Callable):
+        """Record, verify and score one candidate.  A candidate that
+        crashes during recording or whose plan fails static verification
+        is *pruned* — excluded with a typed (label, code, message) row on
+        the verdict scoreboard — never silently swallowed and never
+        allowed to abort the sweep."""
+        from .verify import verify as verify_plan_fn
+        try:
+            sched = make()
+            plan = record_plan(g, sched, info)
+        except Exception as e:                          # noqa: BLE001
+            pruned.append((label, type(e).__name__, str(e)[:200]))
+            return None
+        report = verify_plan_fn(g, plan)
+        if not report.ok:
+            d = report.errors[0]
+            pruned.append((label, d.code, str(d)[:200]))
+            return None
+        try:
+            rep, mem = self._score(g, plan, tp)
+        except Exception as e:                          # noqa: BLE001
+            pruned.append((label, type(e).__name__,
+                           f"cost model failed: {str(e)[:160]}"))
+            return None
+        return plan, rep, mem
 
     def _instantiate(self, winner: str, params: dict, tp: int):
         if winner == "exhaustive":
@@ -565,6 +606,7 @@ class AutoPolicy(StrategyPolicy):
                 "provenance": v.provenance,
                 "measured_us": round(v.measured_s * 1e6, 2),
                 "scores": list(v.scores),
+                "pruned": list(v.pruned),
                 "context_fp": fp,
             })
         rows.sort(key=lambda r: (r["arch"], r["phase"], r["local_batch"],

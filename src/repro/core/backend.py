@@ -170,7 +170,7 @@ class Realizer:
                 env.pop(key, None)
         # final outputs, merged to FULL
         out = {}
-        for (t, p, m, k), name in zip(ana.reads[-1], g.outputs.keys()):
+        for (t, _p, m, k), name in zip(ana.reads[-1], g.outputs.keys()):
             out[name] = self._read(env, t, FULL, m, k)
         return out
 

@@ -359,7 +359,7 @@ def lower(graph: OpGraph, plan: ExecutionPlan,
                 label=f"op {node.name}"))
 
     output_slots = []
-    for (t, p, mode, key), name in zip(analysis.reads[-1],
+    for (t, _p, mode, key), name in zip(analysis.reads[-1],
                                        graph.outputs.keys()):
         output_slots.append((name, slot_for_read(t, FULL, mode, key,
                                                  len(plan.steps))))

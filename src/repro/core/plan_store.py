@@ -135,10 +135,15 @@ class PlanStore:
                  exec_capacity: int = 128,
                  exec_budget_bytes: Optional[int] = None,
                  capacity: Optional[int] = None,
-                 path: Optional[str] = None):
+                 path: Optional[str] = None,
+                 verify_restored: bool = True):
         # ``capacity`` kept for LoweredPlanCache call-site compatibility
         self.plan_capacity = capacity if capacity is not None \
             else plan_capacity
+        # semantic verification of rehydrated instruction streams — the
+        # check *behind* the checksum: a stale or tampered artifact whose
+        # digest and fingerprint both pass can still alias live slots
+        self.verify_restored = verify_restored
         self.plan_budget_bytes = plan_budget_bytes
         self.exec_capacity = exec_capacity
         self.exec_budget_bytes = exec_budget_bytes
@@ -162,6 +167,7 @@ class PlanStore:
             "one_shot_evictions": 0,
             "restore_hits": 0, "restore_canonicals": 0,
             "restore_entries": 0, "restore_rejected": 0,
+            "restore_verify_rejected": 0,
             "restore_errors": 0, "restore_saved": 0, "restore_skipped": 0,
             "restore_s": 0.0,
             "exec_hits": 0, "exec_misses": 0, "exec_evictions": 0,
@@ -478,6 +484,8 @@ class PlanStore:
         except RestoreError:
             self.stats["restore_rejected"] += 1
             return None
+        if not self._verify_restored_plan(lowered):
+            return None
         self.stats["restore_s"] += time.perf_counter() - t0
         self.stats["restore_hits"] += 1
         self._insert(outer, key, lowered)
@@ -506,8 +514,26 @@ class PlanStore:
         except RestoreError:
             self.stats["restore_rejected"] += 1
             return None
+        if not self._verify_restored_plan(skel):
+            return None
         self.stats["restore_canonicals"] += 1
         return skel
+
+    def _verify_restored_plan(self, lowered: LoweredPlan) -> bool:
+        """Semantic gate behind the checksum: symbolically replay the
+        rehydrated slot machine (``core.verify``).  A rejected artifact
+        degrades to a cold lower under ``restore_verify_rejected`` — it
+        is never admitted, never retried."""
+        if not self.verify_restored:
+            return True
+        from .verify import verify_lowered
+        errors = [d for d in verify_lowered(lowered)
+                  if d.severity == "error"]
+        if errors:
+            self.stats["restore_rejected"] += 1
+            self.stats["restore_verify_rejected"] += 1
+            return False
+        return True
 
     # -- executable level --------------------------------------------------
     def key_for(self, plan_fp: str, inputs: dict) -> tuple:

@@ -25,6 +25,15 @@ from .graph import FULL, OpGraph
 from .plan import ExecutionPlan, OpHandle, PlanStep, graph_fingerprint
 
 
+class ScheduleError(RuntimeError):
+    """A schedule violated the recording contract; ``diagnostic`` (when
+    set) carries the typed finding behind the message."""
+
+    def __init__(self, message: str, diagnostic=None):
+        super().__init__(message)
+        self.diagnostic = diagnostic
+
+
 @dataclasses.dataclass
 class ScheduleContext:
     """Static context a schedule may condition on (the paper's 'execution
@@ -172,13 +181,13 @@ class SchedCtx:
             done = self._done.setdefault(h.oid, set())
             parts = set(self._parts()) if step.kind == "merged" else {h.mb}
             if done & parts:
-                raise RuntimeError(f"{h} already executed")
+                raise ScheduleError(f"{h} already executed")
             check_part = FULL if step.kind == "merged" else h.mb
             for t in n.inputs:
                 if t in group_internal:
                     continue
                 if not self._input_ok(t, check_part):
-                    raise RuntimeError(
+                    raise ScheduleError(
                         f"dependency violation: {h} needs tensor {t} "
                         f"part {check_part} before it is produced")
             done |= parts
@@ -201,7 +210,9 @@ class SchedCtx:
             if not (need <= done or FULL in done):
                 missing.append((self.graph.nodes[oid].name, need - done))
         if missing:
-            raise RuntimeError(f"schedule incomplete; missing: {missing[:5]}")
+            from .verify import format_missing
+            raise ScheduleError(
+                f"schedule incomplete; {format_missing(missing)}")
         return ExecutionPlan(list(self.steps), self.split_sizes,
                              graph_fingerprint(self.graph))
 
@@ -221,7 +232,17 @@ class OpSchedulerBase:
 
 
 def record_plan(graph: OpGraph, scheduler: OpSchedulerBase,
-                info: ScheduleContext) -> ExecutionPlan:
+                info: ScheduleContext,
+                verify: str = "off") -> ExecutionPlan:
+    """Record a plan; ``verify`` runs the static verifier on the result:
+    ``"off"`` (default) skips it, ``"warn"`` emits a Python warning on
+    error-severity diagnostics, ``"strict"`` raises
+    :class:`~repro.core.verify.PlanVerificationError`."""
     ctx = SchedCtx(graph, info)
     scheduler.schedule(ctx)
-    return ctx.finalize()
+    plan = ctx.finalize()
+    if verify != "off":
+        from .verify import enforce, verify as run_verify
+        report = run_verify(graph, plan, lint=False)
+        enforce(report, verify, what=f"plan from {scheduler.name!r}")
+    return plan

@@ -41,7 +41,8 @@ def skip_reason(cfg, shape_name: str):
 
 def run_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
              strategy: str = "dynamic", verbose: bool = True,
-             attn_sub: bool = False, remat_policy: str = "full") -> dict:
+             attn_sub: bool = False, remat_policy: str = "full",
+             verify: str = "warn") -> dict:
     cfg = get_config(arch)
     reason = skip_reason(cfg, shape_name)
     mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
@@ -54,7 +55,7 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
     minfo = make_mesh_info(mesh, fsdp=fsdp, attn_impl="chunked",
                            fsdp_resident=(shape.kind == "decode"))
     program = api.compile(cfg, policy=get_strategy(strategy), mesh=mesh,
-                          mesh_info=minfo)
+                          mesh_info=minfo, verify=verify)
 
     t0 = time.perf_counter()
     if shape.kind == "train":
@@ -156,6 +157,11 @@ def main():
                          "model for the tagged scopes")
     ap.add_argument("--remat-policy", default="full",
                     choices=("full", "dots"))
+    ap.add_argument("--verify", default="warn",
+                    choices=("off", "warn", "strict"),
+                    help="static plan verification mode for every cell "
+                         "(core.verify; strict fails the cell on "
+                         "error-severity diagnostics)")
     args = ap.parse_args()
 
     archs = list_archs() if args.all or not args.arch else [args.arch]
@@ -170,7 +176,8 @@ def main():
                     rec = run_cell(arch, shape, multi_pod=mp,
                                    strategy=args.strategy,
                                    attn_sub=args.attn_sub,
-                                   remat_policy=args.remat_policy)
+                                   remat_policy=args.remat_policy,
+                                   verify=args.verify)
                     save_record(rec)
                     if rec["status"] == "skipped":
                         print(f"[{arch} × {shape} × "

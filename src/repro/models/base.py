@@ -15,7 +15,7 @@ Conventions
 from __future__ import annotations
 
 import dataclasses
-from typing import Sequence
+from typing import Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -133,7 +133,9 @@ def build_forward(segments: Sequence[Segment],
                   remat_policy: str = "full",
                   lowered: bool = True,
                   plan_cache=None,
-                  op_config=()) -> Forward:
+                  op_config=(),
+                  verify: str = "off",
+                  verify_sink: Optional[list] = None) -> Forward:
     """Partition + schedule every segment graph, returning the Forward.
 
     ``scheduler`` may be an ``OpSchedulerBase``, a ``StrategyPolicy``, or
@@ -158,6 +160,14 @@ def build_forward(segments: Sequence[Segment],
     can see.  Pass it whenever one store serves more than one (model,
     mesh) so structurally identical graphs with different kernel or
     sharding choices cannot alias.
+
+    ``verify`` runs the static verifier (``core.verify``) on every
+    segment's recorded plan *and* its lowered IR (including plans
+    redeemed from a persisted store): ``"off"`` skips, ``"warn"`` emits
+    a Python warning on error-severity diagnostics, ``"strict"`` raises
+    ``PlanVerificationError``.  ``verify_sink`` (a list) collects every
+    ``(segment_key, VerifyReport)`` pair regardless of mode — the feed
+    behind ``api.Program.verify()``.
     """
     from ..core.plan import strategy_salt
     from ..core.policy import as_policy, resolve_strategy
@@ -177,10 +187,19 @@ def build_forward(segments: Sequence[Segment],
             g = partition(g, rules, default_depth=2)
         plan = record_plan(g, sched, info)
         seg = dataclasses.replace(seg, graph=g)
-        realizers[seg.key] = Realizer(g, plan, lowered=lowered,
-                                      plan_cache=plan_cache,
-                                      plan_salt=f"{salt}|{seg.key}",
-                                      op_config=op_config)
+        rz = Realizer(g, plan, lowered=lowered,
+                      plan_cache=plan_cache,
+                      plan_salt=f"{salt}|{seg.key}",
+                      op_config=op_config)
+        if verify != "off" or verify_sink is not None:
+            from ..core.verify import enforce, verify as run_verify
+            report = run_verify(
+                g, plan, lowered=getattr(rz, "lowered", None), lint=True)
+            if verify_sink is not None:
+                verify_sink.append((f"{info.phase}/{seg.key}", report))
+            enforce(report, verify if verify != "off" else "report",
+                    what=f"segment {seg.key!r} plan")
+        realizers[seg.key] = rz
         segs.append(seg)
     return Forward(segs, realizers, remat=remat, remat_policy=remat_policy)
 

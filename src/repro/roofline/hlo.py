@@ -374,7 +374,7 @@ def analyze(hlo: str, substitute_scopes: tuple = ()) -> dict:
     # substituted scopes: charge 10% of their naive traffic as the kernel
     # boundary (q/k/v/o + partial-block spill), a measured-shape-level
     # bound validated against the interpret-mode kernel's operand set
-    for sc, b in sub_hbm.items():
+    for _sc, b in sub_hbm.items():
         hbm += 0.1 * b
     coll["total"] = sum(v for k, v in coll.items() if k != "total")
     return {"flops": flops, "hbm_bytes": hbm, "collectives": coll,

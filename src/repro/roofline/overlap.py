@@ -175,7 +175,7 @@ def plan_overlap(graph: OpGraph, plan: ExecutionPlan, tp: int = 16,
     # overlap pass: collective i's WIRE time covers steps j in
     # (i, first_dependent); its own local (fused compute) part serializes
     exposed = 0.0
-    for i, (eng, t, w) in enumerate(costs):
+    for i, (_eng, _t, w) in enumerate(costs):
         if w <= 0.0:
             continue
         window = 0.0

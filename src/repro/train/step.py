@@ -120,7 +120,9 @@ def _build_train_step(model, scheduler, B_loc: int, S: int,
                       cfg: TrainStepConfig,
                       info: Optional[ScheduleContext] = None,
                       plan_store=None,
-                      plan_store_path: Optional[str] = None):
+                      plan_store_path: Optional[str] = None,
+                      verify: str = "off",
+                      verify_sink: Optional[list] = None):
     """Returns (train_step, segments, binputs, init_opt).
 
     ``scheduler`` may be an ``OpSchedulerBase`` or a ``StrategyPolicy``
@@ -145,7 +147,8 @@ def _build_train_step(model, scheduler, B_loc: int, S: int,
     fwd = build_forward(segs, scheduler, info, remat=cfg.remat,
                         remat_policy=cfg.remat_policy, lowered=cfg.lowered,
                         plan_cache=plan_store,
-                        op_config=model.op_closure_config())
+                        op_config=model.op_closure_config(),
+                        verify=verify, verify_sink=verify_sink)
     checkpoint_plan_store(plan_store)
     pspecs = model.param_pspecs(segs)
     sp_train = bool(getattr(model.cfg, "seq_parallel", False))

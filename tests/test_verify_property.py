@@ -1,0 +1,86 @@
+"""Property test: the verifier and the runtime agree.
+
+Over random DAGs × random valid schedules (splits, merges, fused
+groups) plus random plan mutations (drop / duplicate / swap steps):
+
+  * a freshly recorded plan always verifies clean, interprets, lowers,
+    and both backends agree bitwise,
+  * if the interpreter rejects a mutated plan, the verifier flagged at
+    least one error-severity diagnostic for it (no false negatives),
+  * if the verifier says a mutated plan is clean, the interpreter
+    executes it and reproduces the unmutated plan's outputs (no false
+    positives on reordered-but-valid schedules).
+
+Duplicated steps are the one asymmetry: the interpreter happily
+recomputes them, the verifier flags VFY004 — so the converse direction
+(flagged => rejected) is intentionally NOT a property.
+"""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import Realizer, ScheduleContext, record_plan
+from repro.core.plan import ExecutionPlan
+from repro.core.verify import verify
+from test_lowering import RandomScheduler, _assert_same, _setup
+
+
+def _mutate(plan, kind, rng):
+    steps = list(plan.steps)
+    if len(steps) < 2:
+        return plan
+    i = int(rng.integers(len(steps)))
+    j = int(rng.integers(len(steps)))
+    if kind == "drop":
+        del steps[i]
+    elif kind == "dup":
+        steps.insert(i, steps[i])
+    else:                                      # swap
+        steps[i], steps[j] = steps[j], steps[i]
+    return ExecutionPlan(steps, plan.split_sizes, plan.graph_fingerprint)
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 10_000),
+       n_ops=st.integers(3, 8),
+       split=st.sampled_from([(), (4, 4), (2, 6), (2, 2, 4)]),
+       merge_prob=st.floats(0.0, 0.9))
+def test_recorded_plans_always_verify_clean(seed, n_ops, split, merge_prob):
+    g, params, x = _setup(seed % 50, n_ops)
+    plan = record_plan(g, RandomScheduler(seed, split, merge_prob),
+                       ScheduleContext(local_batch=8))
+    rep = verify(g, plan)
+    assert rep.ok, rep.pretty()
+    want = Realizer(g, plan, lowered=False)(params, {"x": x})
+    rz = Realizer(g, plan, lowered=True)
+    assert not verify(g, plan, lowered=rz.lowered, lint=False).errors
+    _assert_same(want, rz(params, {"x": x}))
+
+
+@settings(max_examples=40, deadline=None)
+@given(seed=st.integers(0, 10_000),
+       n_ops=st.integers(3, 8),
+       split=st.sampled_from([(), (4, 4), (2, 6)]),
+       merge_prob=st.floats(0.0, 0.9),
+       kind=st.sampled_from(["drop", "dup", "swap"]))
+def test_verifier_agrees_with_interpreter_on_mutations(seed, n_ops, split,
+                                                       merge_prob, kind):
+    g, params, x = _setup(seed % 50, n_ops)
+    plan = record_plan(g, RandomScheduler(seed, split, merge_prob),
+                       ScheduleContext(local_batch=8))
+    rng = np.random.default_rng(seed + 1)
+    mut = _mutate(plan, kind, rng)
+    rep = verify(g, mut)
+    try:
+        got = Realizer(g, mut, lowered=False)(params, {"x": x})
+        executed = True
+    except Exception:                          # noqa: BLE001
+        executed = False
+    if not executed:
+        # runtime rejection implies at least one typed error diagnostic
+        assert rep.errors, (kind, rep.pretty())
+    if rep.ok:
+        # verifier-clean implies the runtime executes AND the mutation
+        # was semantically neutral (e.g. a swap of independent steps)
+        assert executed
+        want = Realizer(g, plan, lowered=False)(params, {"x": x})
+        _assert_same(want, got)
